@@ -1,0 +1,45 @@
+//! Regenerate the paper's Fig. 1 and Fig. 2 as PPM images in `out/`.
+//!
+//! - Fig. 1: 15 points as vectors (scatter) vs. as an image (grid).
+//! - Fig. 2: the active search around a '+' query — every radius the
+//!   Eq.-1 loop tried, final circle in black.
+//!
+//! ```sh
+//! cargo run --release --example figures && ls out/
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::grid::MultiGrid;
+use asnn::viz;
+
+fn main() -> asnn::Result<()> {
+    let out = Path::new("out");
+
+    // ---- Fig. 1: "15 data points as 2 dimensional vectors … and an
+    // image of the points" ----
+    let tiny = generate(&SyntheticSpec::blobs(15, 3, 2019));
+    viz::render_scatter(&tiny, 600, 5)?.save_ppm(&out.join("fig1_vectors.ppm"))?;
+    let grid = MultiGrid::build(&tiny, 600)?;
+    viz::render_grid(&grid, 5).save_ppm(&out.join("fig1_image.ppm"))?;
+    println!("fig1: out/fig1_vectors.ppm (left) out/fig1_image.ppm (right)");
+
+    // ---- Fig. 2: active search on a 3-class image around '+' ----
+    let data = Arc::new(generate(&SyntheticSpec::blobs(400, 3, 2021)));
+    let engine = ActiveEngine::new(data, 600, ActiveParams { r0: 60, ..Default::default() })?;
+    let query = [0.45, 0.55];
+    let circle = engine.search(&query, 11)?;
+    let img = viz::render_trace(engine.grid(), (circle.cx, circle.cy), &circle.trace, 2);
+    img.save_ppm(&out.join("fig2_trace.ppm"))?;
+    println!(
+        "fig2: out/fig2_trace.ppm — {} iterations, radii {:?}, final r={} (n={})",
+        circle.trace.iterations(),
+        circle.trace.steps.iter().map(|s| s.r).collect::<Vec<_>>(),
+        circle.r,
+        circle.n_inside,
+    );
+    Ok(())
+}

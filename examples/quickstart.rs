@@ -1,0 +1,50 @@
+//! Quickstart: build an index, search, classify — the 60-second tour.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::NnEngine;
+
+fn main() -> asnn::Result<()> {
+    // 1. a dataset: the paper's workload — uniform 2-D points, 3 classes
+    let data = Arc::new(generate(&SyntheticSpec::paper_default(10_000, 42)));
+    println!("dataset: {} points, {} classes", data.len(), data.num_classes);
+
+    // 2. the paper's engine: rasterize onto a count image, search by
+    //    growing/shrinking a circle (Eq. 1)
+    let active = ActiveEngine::new(data.clone(), 1000, ActiveParams::default())?;
+
+    // 3. k nearest neighbors of a fresh point
+    let query = [0.5, 0.5];
+    let hits = active.knn(&query, 11)?;
+    println!("active search found {} neighbors:", hits.len());
+    for h in hits.iter().take(5) {
+        println!("  id={} dist={:.4} label={}", h.id, h.dist, h.label);
+    }
+
+    // 4. compare against the exact ground truth
+    let brute = BruteEngine::new(data);
+    let truth = brute.knn(&query, 11)?;
+    let truth_ids: Vec<u32> = truth.iter().map(|n| n.id).collect();
+    let overlap = hits.iter().filter(|h| truth_ids.contains(&h.id)).count();
+    println!("overlap with exact kNN: {overlap}/11");
+
+    // 5. classification — the paper's per-class count-image vote
+    let label = active.classify(&query, 11)?;
+    println!("predicted class at {query:?}: {label}");
+
+    // 6. the search trace (what Fig. 2 visualizes)
+    let circle = active.search(&query, 11)?;
+    print!("radius trajectory:");
+    for s in &circle.trace.steps {
+        print!(" r={}→n={}", s.r, s.n);
+    }
+    println!("  (converged={})", circle.trace.converged);
+    Ok(())
+}

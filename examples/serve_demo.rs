@@ -1,0 +1,75 @@
+//! Serving demo: spin up the coordinator, drive it with concurrent
+//! clients over TCP, and report latency/throughput — the paper's
+//! algorithm as a deployed service.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+
+use std::sync::Arc;
+
+use asnn::coordinator::server::Client;
+use asnn::coordinator::{Metrics, Request, Response, Router, Server};
+use asnn::data::synthetic::{generate, generate_queries, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::kdtree::KdTreeEngine;
+use asnn::util::timer::Timer;
+
+const N: usize = 100_000;
+const CLIENTS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 200;
+
+fn main() -> asnn::Result<()> {
+    println!("building index over {N} points…");
+    let data = Arc::new(generate(&SyntheticSpec::paper_default(N, 7)));
+    let metrics = Arc::new(Metrics::new());
+    let mut router = Router::new("active", metrics.clone());
+    router.register("brute", Arc::new(BruteEngine::new(data.clone())));
+    router.register("kdtree", Arc::new(KdTreeEngine::build(data.clone())));
+    router.register(
+        "active",
+        Arc::new(ActiveEngine::new(data, 3000, ActiveParams::default())?),
+    );
+
+    let handle = Server::new(Arc::new(router), CLIENTS).spawn("127.0.0.1:0")?;
+    println!("serving on {}", handle.addr);
+
+    let addr = handle.addr;
+    let t = Timer::new();
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let queries = generate_queries(REQUESTS_PER_CLIENT, 2, 100 + c as u64);
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut ok = 0usize;
+                for (i, q) in queries.iter().enumerate() {
+                    let req = if i % 3 == 0 {
+                        Request::Classify { k: 11, x: q[0], y: q[1], engine: None }
+                    } else {
+                        Request::Knn { k: 11, x: q[0], y: q[1], engine: None }
+                    };
+                    match client.call(&req).expect("call") {
+                        Response::Neighbors(_) | Response::Label(_) => ok += 1,
+                        other => panic!("unexpected: {other:?}"),
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let total_ok: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    let secs = t.elapsed_secs();
+
+    let total = CLIENTS * REQUESTS_PER_CLIENT;
+    println!(
+        "{total_ok}/{total} requests ok in {secs:.2}s → {:.0} req/s over {CLIENTS} connections",
+        total as f64 / secs
+    );
+    let mut stats_client = Client::connect(&addr)?;
+    if let Response::Text(stats) = stats_client.call(&Request::Stats)? {
+        println!("server metrics: {stats}");
+    }
+    handle.shutdown();
+    Ok(())
+}

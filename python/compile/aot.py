@@ -1,0 +1,128 @@
+"""AOT pipeline: lower the L2 model to HLO **text** artifacts + manifest.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+HLO text is the interchange format — jax ≥ 0.5 serializes
+HloModuleProto with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import K_MAX
+
+# Static shape grid. Window sizes are the coordinator's "zoom levels";
+# W = 512 windows are 1 MiB/class (the VMEM budget discussed in
+# DESIGN.md). Batch 16 feeds the coordinator's deadline batcher.
+WINDOWS = (64, 128, 256, 512)
+BATCHES = (1, 16)
+KNN_CHUNK = 4096
+KNN_BATCHES = (1, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side always un-tuples)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_disk_count(num_classes, window, batch):
+    fn = model.make_disk_count(num_classes, window, batch=batch)
+    if batch == 1:
+        args = (f32(num_classes, window, window), f32(), f32(), f32())
+    else:
+        args = (f32(batch, num_classes, window, window), f32(batch), f32(), f32())
+    return jax.jit(fn).lower(*args)
+
+
+def lower_neighbor_scan(window):
+    fn = model.make_neighbor_scan(window)
+    return jax.jit(fn).lower(f32(window, window), f32(), f32())
+
+
+def lower_knn_chunk(batch):
+    fn = model.make_knn_chunk(batch, KNN_CHUNK)
+    return jax.jit(fn).lower(f32(batch, 2), f32(KNN_CHUNK, 2), f32())
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--classes", type=int, default=3, help="class channels (paper: 3)")
+    ap.add_argument(
+        "--windows", type=int, nargs="*", default=list(WINDOWS), help="window sizes"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = ["version = 1", f"classes = {args.classes}", ""]
+
+    def emit(name, lowered, **meta):
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"[{name}]")
+        manifest.append(f'file = "{name}.hlo.txt"')
+        for key, val in meta.items():
+            if isinstance(val, str):
+                manifest.append(f'{key} = "{val}"')
+            else:
+                manifest.append(f"{key} = {val}")
+        manifest.append("")
+        print(f"  {name}: {len(text)} chars")
+
+    print(f"lowering artifacts to {args.out} (classes={args.classes})")
+    for w in args.windows:
+        for b in BATCHES:
+            emit(
+                f"disk_count_w{w}_b{b}",
+                lower_disk_count(args.classes, w, b),
+                kind="disk_count",
+                window=w,
+                batch=b,
+                classes=args.classes,
+            )
+        emit(
+            f"neighbor_scan_w{w}",
+            lower_neighbor_scan(w),
+            kind="neighbor_scan",
+            window=w,
+            batch=1,
+            classes=args.classes,
+            k_max=K_MAX,
+        )
+    for b in KNN_BATCHES:
+        emit(
+            f"knn_chunk_b{b}",
+            lower_knn_chunk(b),
+            kind="knn_chunk",
+            batch=b,
+            chunk=KNN_CHUNK,
+            k_max=K_MAX,
+        )
+
+    with open(os.path.join(args.out, "manifest.toml"), "w") as f:
+        f.write("\n".join(manifest))
+    print(f"wrote manifest with {len([l for l in manifest if l.startswith('[')])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the active-search hot spots.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT client
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain
+HLO that any backend runs. On a real TPU the same kernels compile with
+``interpret=False`` — the BlockSpecs below are written for VMEM tiling
+(see DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import disk_count, knn_chunk, neighbor_scan, ref  # noqa: F401

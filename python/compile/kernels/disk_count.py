@@ -1,0 +1,52 @@
+"""Pallas kernel: per-class masked count of points inside a scan circle.
+
+The paper's hot spot — "checking all the inner pixels of the current
+circle" — phrased as a data-parallel masked reduction over a window of
+the per-class count image.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one class plane of a
+W ≤ 512 window is ≤ 1 MiB f32 — a single VMEM block. The grid iterates
+classes, so HBM→VMEM streams each plane exactly once per call; the mask
+is computed from iota (no memory traffic) and fused into the reduction.
+Arithmetic intensity ≈ 3 flops/byte — the kernel is bandwidth-bound and
+the BlockSpec keeps it at one pass.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(win_ref, r_ref, m_ref, out_ref):
+    """One class plane: win_ref [1, W, W]; r/m [1, 1]; out [1]."""
+    w = win_ref.shape[-1]
+    c = w // 2
+    dy = jax.lax.broadcasted_iota(jnp.float32, (w, w), 0) - c
+    dx = jax.lax.broadcasted_iota(jnp.float32, (w, w), 1) - c
+    r = r_ref[0, 0]
+    inside_l2 = dx * dx + dy * dy <= r * r
+    inside_l1 = jnp.abs(dx) + jnp.abs(dy) <= r
+    mask = jnp.where(m_ref[0, 0] > 0.5, inside_l1, inside_l2)
+    out_ref[0] = jnp.sum(win_ref[0] * mask.astype(jnp.float32))
+
+
+def disk_count_classes(window, r, metric_l1, interpret=True):
+    """Per-class in-circle counts.
+
+    window: [C, W, W] f32; r, metric_l1: scalars. Returns counts [C].
+    """
+    c, w, _ = window.shape
+    r2d = jnp.reshape(r, (1, 1)).astype(jnp.float32)
+    m2d = jnp.reshape(metric_l1, (1, 1)).astype(jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, w, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=interpret,
+    )(window, r2d, m2d)

@@ -1,0 +1,48 @@
+"""Pallas kernel: brute-force distance tile for the baseline kNN.
+
+The paper's "original kNN" comparator, phrased for the MXU: the B×N
+squared-distance matrix is computed via the ‖q‖² + ‖p‖² − 2·q·pᵀ
+expansion, whose dominant term is a matmul — exactly what the systolic
+array wants (the CUDA equivalent would be a WMMA tile; see DESIGN.md
+§Hardware-Adaptation). Columns past ``valid`` (chunk padding) are set
+to +inf.
+
+TPU mapping: B ≤ 16 queries × N = 4096 chunk points = 256 KiB output
+tile in VMEM; inputs are tiny. One block, one pass.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, p_ref, v_ref, out_ref):
+    """q_ref: [B, 2]; p_ref: [N, 2]; v_ref: [1, 1]; out_ref: [B, N]."""
+    q = q_ref[...]
+    p = p_ref[...]
+    qn = jnp.sum(q * q, axis=1, keepdims=True)          # [B, 1]
+    pn = jnp.sum(p * p, axis=1, keepdims=True).T        # [1, N]
+    cross = jnp.dot(q, p.T)                             # MXU matmul [B, N]
+    d2 = qn + pn - 2.0 * cross
+    d2 = jnp.maximum(d2, 0.0)                           # numeric floor
+    n = p_ref.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.float32, (q.shape[0], n), 1)
+    out_ref[...] = jnp.where(col < v_ref[0, 0], d2, jnp.inf)
+
+
+def distance_tile(queries, chunk, valid, interpret=True):
+    """[B,2] × [N,2] → [B,N] masked squared distances."""
+    b = queries.shape[0]
+    n = chunk.shape[0]
+    v2d = jnp.reshape(valid, (1, 1)).astype(jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        in_specs=[
+            pl.BlockSpec((b, 2), lambda: (0, 0)),
+            pl.BlockSpec((n, 2), lambda: (0, 0)),
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, n), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(queries, chunk, v2d)

@@ -1,0 +1,48 @@
+"""Pallas kernel: masked distance map for in-circle neighbor extraction.
+
+Produces, for a window of the total-count image, the pixel-space
+distance of every *occupied, in-circle* pixel from the window center
+(+inf elsewhere). The L2 model composes this with ``lax.top_k`` to rank
+the K nearest occupied pixels; rust expands pixels back to point ids
+through the grid's bucket index.
+
+TPU mapping: the W×W window is one VMEM block (≤ 1 MiB at W = 512);
+distance and masks come from iota, so the kernel streams the window
+once and writes the same-shape map — pure bandwidth, no MXU needed.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(win_ref, r_ref, m_ref, out_ref):
+    """win_ref: [W, W] totals; out_ref: [W, W] masked distances."""
+    w = win_ref.shape[-1]
+    c = w // 2
+    dy = jax.lax.broadcasted_iota(jnp.float32, (w, w), 0) - c
+    dx = jax.lax.broadcasted_iota(jnp.float32, (w, w), 1) - c
+    r = r_ref[0, 0]
+    l1 = m_ref[0, 0] > 0.5
+    dist = jnp.where(l1, jnp.abs(dx) + jnp.abs(dy), dx * dx + dy * dy)
+    limit = jnp.where(l1, r, r * r)
+    valid = (win_ref[...] > 0.0) & (dist <= limit)
+    out_ref[...] = jnp.where(valid, dist, jnp.inf)
+
+
+def masked_distance_map(window_total, r, metric_l1, interpret=True):
+    """[W, W] totals → [W, W] masked distance map (+inf = not a hit)."""
+    w = window_total.shape[-1]
+    r2d = jnp.reshape(r, (1, 1)).astype(jnp.float32)
+    m2d = jnp.reshape(metric_l1, (1, 1)).astype(jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        in_specs=[
+            pl.BlockSpec((w, w), lambda: (0, 0)),
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((w, w), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, w), jnp.float32),
+        interpret=interpret,
+    )(window_total, r2d, m2d)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness signal.
+
+Each ``*_ref`` mirrors its kernel's semantics with straightforward
+jax.numpy so pytest can ``assert_allclose`` kernel vs. oracle across
+shape/dtype sweeps (hypothesis drives the sweeps in
+``python/tests/``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+K_MAX = 32
+
+
+def _pixel_offsets(w):
+    """dy/dx offsets of every pixel in a w-by-w window from its center."""
+    c = w // 2
+    ys = jnp.arange(w, dtype=jnp.float32) - c
+    xs = jnp.arange(w, dtype=jnp.float32) - c
+    dy = ys[:, None] * jnp.ones((1, w), jnp.float32)
+    dx = xs[None, :] * jnp.ones((w, 1), jnp.float32)
+    return dy, dx
+
+
+def disk_mask(w, r, metric_l1):
+    """Boolean in-circle mask for a w-window; r scalar; metric flag scalar."""
+    dy, dx = _pixel_offsets(w)
+    l2 = dx * dx + dy * dy <= r * r
+    l1 = jnp.abs(dx) + jnp.abs(dy) <= r
+    return jnp.where(metric_l1 > 0.5, l1, l2)
+
+
+def disk_count_ref(window, r, k, metric_l1):
+    """Oracle for the disk_count kernel + Eq. 1 epilogue.
+
+    window: [C, W, W] per-class counts; returns (per-class counts [C],
+    total scalar, Eq.-1 next radius scalar).
+    """
+    w = window.shape[-1]
+    mask = disk_mask(w, r, metric_l1).astype(jnp.float32)
+    counts = jnp.sum(window * mask[None, :, :], axis=(1, 2))
+    total = jnp.sum(counts)
+    # Eq. 1 with the n = 0 doubling guard (matches rust RadiusPolicy)
+    next_r = jnp.where(
+        total > 0.0,
+        jnp.round(r * jnp.sqrt(k / jnp.maximum(total, 1.0))),
+        jnp.round(r * 2.0),
+    )
+    next_r = jnp.maximum(next_r, 1.0)
+    return counts, total, next_r
+
+
+def neighbor_scan_ref(window_total, r, metric_l1, k_max=K_MAX):
+    """Oracle for the neighbor_scan kernel: masked distance map + top-k.
+
+    window_total: [W, W] total counts. Returns (dists [k_max],
+    flat pixel indices [k_max] i32); +inf / -1 padding.
+    """
+    w = window_total.shape[-1]
+    dy, dx = _pixel_offsets(w)
+    d_l2 = dx * dx + dy * dy  # squared
+    d_l1 = jnp.abs(dx) + jnp.abs(dy)
+    dist = jnp.where(metric_l1 > 0.5, d_l1, d_l2)
+    limit = jnp.where(metric_l1 > 0.5, r, r * r)
+    valid = (window_total > 0.0) & (dist <= limit)
+    scored = jnp.where(valid, dist, jnp.inf).reshape(-1)
+    neg_top, idx = jax.lax.top_k(-scored, k_max)
+    dists = -neg_top
+    idx = jnp.where(jnp.isfinite(dists), idx, -1).astype(jnp.int32)
+    return dists, idx
+
+
+def knn_chunk_ref(queries, chunk, valid, k_max=K_MAX):
+    """Oracle for the knn_chunk kernel: exact top-k over one chunk.
+
+    queries: [B, 2], chunk: [N, 2], valid: live prefix length.
+    Returns (d2 [B, k_max], indices [B, k_max] i32), +inf/-1 padded.
+    """
+    d2 = (
+        jnp.sum(queries**2, axis=1)[:, None]
+        + jnp.sum(chunk**2, axis=1)[None, :]
+        - 2.0 * queries @ chunk.T
+    )
+    n = chunk.shape[0]
+    col = jnp.arange(n, dtype=jnp.float32)[None, :]
+    d2 = jnp.where(col < valid, d2, jnp.inf)
+    neg_top, idx = jax.lax.top_k(-d2, k_max)
+    dists = -neg_top
+    idx = jnp.where(jnp.isfinite(dists), idx, -1).astype(jnp.int32)
+    return dists, idx
+
+

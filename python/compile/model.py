@@ -1,0 +1,103 @@
+"""L2 jax model: the computations the rust coordinator executes via
+PJRT, composed from the L1 Pallas kernels.
+
+Each ``make_*`` returns a pure jax function with **static shapes**
+(PJRT executables are shape-specialized); ``aot.py`` lowers one
+executable per (window, batch) combination and records them in the
+artifact manifest.
+
+Output conventions (mirrored by ``rust/src/runtime/artifacts.rs``):
+
+- ``disk_count``:    (class_counts, total, next_r)
+- ``neighbor_scan``: (dists [K_MAX], flat indices [K_MAX] i32)
+- ``knn_chunk``:     (d2 [B, K_MAX], indices [B, K_MAX] i32)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import disk_count as dc
+from .kernels import knn_chunk as kc
+from .kernels import neighbor_scan as ns
+from .kernels.ref import K_MAX
+
+
+def bottom_k(x, k):
+    """Smallest-k of a 1-D array as (values, indices i32), ascending;
+    +inf/-1 padding for absent entries.
+
+    Implemented as k iterations of masked argmin (scan) instead of
+    ``lax.top_k``: jax lowers top_k to a `topk(..., largest=true)` HLO
+    attribute that the xla_extension 0.5.1 text parser rejects, while
+    argmin/scatter/while round-trip cleanly.
+    """
+
+    def body(cur, _):
+        i = jnp.argmin(cur)
+        v = cur[i]
+        return cur.at[i].set(jnp.inf), (v, i.astype(jnp.int32))
+
+    _, (vals, idxs) = jax.lax.scan(body, x, None, length=k)
+    idxs = jnp.where(jnp.isfinite(vals), idxs, -1)
+    return vals, idxs
+
+
+def eq1_next_radius(r, k, total):
+    """Paper Eq. 1 with the n = 0 doubling guard (matches the rust
+    ``RadiusPolicy``): r ← round(r·√(k/n)), or 2r when the circle is
+    empty; never below 1."""
+    grown = jnp.round(r * 2.0)
+    adapted = jnp.round(r * jnp.sqrt(k / jnp.maximum(total, 1.0)))
+    return jnp.maximum(jnp.where(total > 0.0, adapted, grown), 1.0)
+
+
+def make_disk_count(num_classes, window, batch=1, interpret=True):
+    """Active-search step: count per class inside the circle, emit the
+    Eq.-1 next radius.
+
+    batch = 1 signature: (window [C,W,W], r, k, metric) →
+        (counts [C], total [], next_r [])
+    batch > 1 signature: (windows [B,C,W,W], rs [B], k, metric) →
+        (counts [B,C], totals [B], next_rs [B])
+    """
+
+    def single(win, r, k, metric_l1):
+        counts = dc.disk_count_classes(win, r, metric_l1, interpret=interpret)
+        total = jnp.sum(counts)
+        return counts, total, eq1_next_radius(r, k, total)
+
+    if batch == 1:
+        def fn(win, r, k, metric_l1):
+            return single(win, r, k, metric_l1)
+        return fn
+
+    def fn_batch(wins, rs, k, metric_l1):
+        counts, totals, next_rs = jax.vmap(
+            lambda w, r: single(w, r, k, metric_l1)
+        )(wins, rs)
+        return counts, totals, next_rs
+
+    return fn_batch
+
+
+def make_neighbor_scan(window, k_max=K_MAX, interpret=True):
+    """Final-circle extraction: (window_total [W,W], r, metric) →
+    top-k_max occupied pixels as (dists, flat indices)."""
+
+    def fn(win_total, r, metric_l1):
+        dist_map = ns.masked_distance_map(win_total, r, metric_l1, interpret=interpret)
+        return bottom_k(dist_map.reshape(-1), k_max)
+
+    return fn
+
+
+def make_knn_chunk(batch, chunk, k_max=K_MAX, interpret=True):
+    """Brute-force baseline over one point chunk: (queries [B,2],
+    points [N,2], valid) → per-query (d2 [B,K], idx [B,K])."""
+
+    def fn(queries, points, valid):
+        d2 = kc.distance_tile(queries, points, valid, interpret=interpret)
+        dists, idx = jax.vmap(lambda row: bottom_k(row, k_max))(d2)
+        return dists, idx
+
+    return fn

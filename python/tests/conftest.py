@@ -1,0 +1,26 @@
+"""Shared fixtures for the kernel/model test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def random_window(rng, c, w, density=0.05, max_count=4):
+    """Sparse random per-class count window [C, W, W] f32."""
+    win = np.zeros((c, w, w), np.float32)
+    n = max(1, int(density * c * w * w))
+    cs = rng.integers(0, c, n)
+    ys = rng.integers(0, w, n)
+    xs = rng.integers(0, w, n)
+    for ci, yi, xi in zip(cs, ys, xs):
+        win[ci, yi, xi] += float(rng.integers(1, max_count + 1))
+    return win

@@ -1,0 +1,72 @@
+"""disk_count kernel vs. pure-jnp oracle — the core L1 correctness
+signal, swept over shapes, radii, and metrics (hypothesis drives the
+randomized sweep)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import disk_count as dc
+from compile.kernels import ref
+from tests.conftest import random_window
+
+
+@pytest.mark.parametrize("w", [8, 16, 32, 64])
+@pytest.mark.parametrize("metric", [0.0, 1.0])
+def test_kernel_matches_ref(rng, w, metric):
+    win = random_window(rng, 3, w)
+    r = jnp.float32(w / 3)
+    counts = dc.disk_count_classes(jnp.array(win), r, jnp.float32(metric))
+    want, _, _ = ref.disk_count_ref(jnp.array(win), r, jnp.float32(11), jnp.float32(metric))
+    assert_allclose(np.asarray(counts), np.asarray(want), rtol=0, atol=0)
+
+
+def test_zero_radius_counts_center_only(rng):
+    win = random_window(rng, 3, 16, density=0.5)
+    counts = dc.disk_count_classes(jnp.array(win), jnp.float32(0), jnp.float32(0))
+    assert_allclose(np.asarray(counts), win[:, 8, 8])
+
+
+def test_huge_radius_counts_all(rng):
+    win = random_window(rng, 3, 32)
+    counts = dc.disk_count_classes(jnp.array(win), jnp.float32(1000), jnp.float32(0))
+    assert_allclose(np.asarray(counts), win.sum(axis=(1, 2)))
+
+
+def test_l1_subset_of_l2(rng):
+    win = random_window(rng, 3, 32, density=0.3)
+    r = jnp.float32(9)
+    l2 = dc.disk_count_classes(jnp.array(win), r, jnp.float32(0)).sum()
+    l1 = dc.disk_count_classes(jnp.array(win), r, jnp.float32(1)).sum()
+    assert float(l1) <= float(l2)
+
+
+def test_single_class_window(rng):
+    win = random_window(rng, 1, 16)
+    counts = dc.disk_count_classes(jnp.array(win), jnp.float32(5), jnp.float32(0))
+    assert counts.shape == (1,)
+    want, _, _ = ref.disk_count_ref(jnp.array(win), jnp.float32(5), jnp.float32(3), jnp.float32(0))
+    assert_allclose(np.asarray(counts), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    w=st.sampled_from([8, 16, 24, 32]),
+    c=st.integers(min_value=1, max_value=4),
+    r=st.floats(min_value=0.0, max_value=40.0),
+    metric=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_sweep(w, c, r, metric, seed):
+    rng = np.random.default_rng(seed)
+    win = random_window(rng, c, w, density=0.1)
+    counts = dc.disk_count_classes(jnp.array(win), jnp.float32(r), jnp.float32(metric))
+    want, total, next_r = ref.disk_count_ref(
+        jnp.array(win), jnp.float32(r), jnp.float32(11), jnp.float32(metric)
+    )
+    assert_allclose(np.asarray(counts), np.asarray(want), rtol=0, atol=0)
+    # counts are conservative: never exceed the full window sum
+    assert float(total) <= float(win.sum()) + 1e-6
+    assert float(next_r) >= 1.0

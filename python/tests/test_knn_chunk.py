@@ -1,0 +1,77 @@
+"""knn_chunk kernel (brute baseline tile) vs. oracle and vs. numpy."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import knn_chunk as kc
+from compile.kernels import ref
+
+
+def test_distance_tile_exact(rng):
+    q = rng.random((4, 2)).astype(np.float32)
+    p = rng.random((64, 2)).astype(np.float32)
+    got = kc.distance_tile(jnp.array(q), jnp.array(p), jnp.float32(64))
+    want = ((q[:, None, :] - p[None, :, :]) ** 2).sum(-1)
+    assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+def test_padding_masked(rng):
+    q = rng.random((2, 2)).astype(np.float32)
+    p = rng.random((32, 2)).astype(np.float32)
+    got = np.asarray(kc.distance_tile(jnp.array(q), jnp.array(p), jnp.float32(10)))
+    assert np.all(np.isinf(got[:, 10:]))
+    assert np.all(np.isfinite(got[:, :10]))
+
+
+def test_model_topk_matches_numpy_sort(rng):
+    b, n, valid = 3, 128, 100
+    q = rng.random((b, 2)).astype(np.float32)
+    p = rng.random((n, 2)).astype(np.float32)
+    fn = model.make_knn_chunk(b, n)
+    dists, idx = fn(jnp.array(q), jnp.array(p), jnp.float32(valid))
+    d2 = ((q[:, None, :] - p[None, :valid, :]) ** 2).sum(-1)
+    for bi in range(b):
+        order = np.argsort(d2[bi])[: ref.K_MAX]
+        assert_allclose(np.asarray(dists)[bi], d2[bi][order], atol=1e-5)
+        # index sets agree modulo distance ties
+        assert set(np.asarray(idx)[bi].tolist()) == set(order.tolist())
+
+
+def test_model_matches_oracle(rng):
+    q = rng.random((2, 2)).astype(np.float32)
+    p = rng.random((64, 2)).astype(np.float32)
+    fn = model.make_knn_chunk(2, 64)
+    got_d, _ = fn(jnp.array(q), jnp.array(p), jnp.float32(50))
+    want_d, _ = ref.knn_chunk_ref(jnp.array(q), jnp.array(p), jnp.float32(50))
+    assert_allclose(np.asarray(got_d), np.asarray(want_d), atol=1e-5)
+
+
+def test_query_on_dataset_point_is_rank_zero(rng):
+    p = rng.random((64, 2)).astype(np.float32)
+    q = p[7:8]
+    fn = model.make_knn_chunk(1, 64)
+    dists, idx = fn(jnp.array(q), jnp.array(p), jnp.float32(64))
+    assert int(np.asarray(idx)[0, 0]) == 7
+    assert float(np.asarray(dists)[0, 0]) < 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=8),
+    n=st.sampled_from([33, 64, 128]),
+    valid_frac=st.floats(min_value=0.1, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_tile(b, n, valid_frac, seed):
+    rng = np.random.default_rng(seed)
+    valid = max(1, int(n * valid_frac))
+    q = rng.random((b, 2)).astype(np.float32)
+    p = rng.random((n, 2)).astype(np.float32)
+    got = np.asarray(kc.distance_tile(jnp.array(q), jnp.array(p), jnp.float32(valid)))
+    want = ((q[:, None, :] - p[None, :, :]) ** 2).sum(-1)
+    assert_allclose(got[:, :valid], want[:, :valid], atol=1e-4)
+    assert np.all(np.isinf(got[:, valid:]))

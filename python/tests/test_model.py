@@ -1,0 +1,81 @@
+"""L2 model composition: disk_count step + Eq. 1, batching, and AOT
+lowering shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+from compile.kernels import ref
+from tests.conftest import random_window
+
+
+def test_disk_count_step_outputs(rng):
+    fn = model.make_disk_count(3, 32)
+    win = random_window(rng, 3, 32, density=0.2)
+    counts, total, next_r = fn(jnp.array(win), jnp.float32(8), jnp.float32(11), jnp.float32(0))
+    assert counts.shape == (3,)
+    assert float(total) == float(np.asarray(counts).sum())
+    want_c, want_t, want_r = ref.disk_count_ref(
+        jnp.array(win), jnp.float32(8), jnp.float32(11), jnp.float32(0)
+    )
+    assert_allclose(np.asarray(counts), np.asarray(want_c))
+    assert float(next_r) == float(want_r)
+
+
+def test_eq1_guards():
+    # n = 0 doubles; result never below 1
+    assert float(model.eq1_next_radius(jnp.float32(50), jnp.float32(11), jnp.float32(0))) == 100.0
+    assert float(model.eq1_next_radius(jnp.float32(1), jnp.float32(1), jnp.float32(10_000))) == 1.0
+    # n == k keeps radius
+    assert float(model.eq1_next_radius(jnp.float32(100), jnp.float32(11), jnp.float32(11))) == 100.0
+
+
+def test_batched_disk_count_matches_loop(rng):
+    b, c, w = 4, 3, 16
+    fn_b = model.make_disk_count(c, w, batch=b)
+    fn_1 = model.make_disk_count(c, w, batch=1)
+    wins = np.stack([random_window(rng, c, w, density=0.2) for _ in range(b)])
+    rs = np.array([3.0, 5.0, 7.0, 2.0], np.float32)
+    counts, totals, next_rs = fn_b(jnp.array(wins), jnp.array(rs), jnp.float32(11), jnp.float32(0))
+    assert counts.shape == (b, c)
+    for i in range(b):
+        c1, t1, r1 = fn_1(jnp.array(wins[i]), jnp.float32(rs[i]), jnp.float32(11), jnp.float32(0))
+        assert_allclose(np.asarray(counts)[i], np.asarray(c1))
+        assert float(totals[i]) == float(t1)
+        assert float(next_rs[i]) == float(r1)
+
+
+def test_jit_lowering_all_kinds():
+    # every artifact family lowers to HLO text without error
+    for lowered in [
+        aot.lower_disk_count(3, 16, 1),
+        aot.lower_disk_count(3, 16, 4),
+        aot.lower_neighbor_scan(16),
+        aot.lower_knn_chunk(2),
+    ]:
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert len(text) > 500
+
+
+def test_lowered_disk_count_executes_consistently(rng):
+    # the lowered computation (what rust runs) == the eager one
+    fn = model.make_disk_count(3, 16)
+    win = random_window(rng, 3, 16, density=0.3)
+    args = (jnp.array(win), jnp.float32(4), jnp.float32(11), jnp.float32(0))
+    eager = fn(*args)
+    compiled = jax.jit(fn).lower(*args).compile()(*args)
+    for e, c in zip(eager, compiled):
+        assert_allclose(np.asarray(e), np.asarray(c))
+
+
+@pytest.mark.parametrize("w", [8, 64])
+def test_window_size_parametrization(w):
+    fn = model.make_disk_count(2, w)
+    win = jnp.zeros((2, w, w), jnp.float32).at[0, w // 2, w // 2].set(3.0)
+    counts, total, _ = fn(win, jnp.float32(1), jnp.float32(3), jnp.float32(0))
+    assert float(total) == 3.0
+    assert float(counts[0]) == 3.0

@@ -1,0 +1,91 @@
+"""neighbor_scan kernel + top-k composition vs. oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import neighbor_scan as ns
+from compile.kernels import ref
+from tests.conftest import random_window
+
+
+def totals(rng, w, density=0.05):
+    return random_window(rng, 1, w, density=density)[0]
+
+
+@pytest.mark.parametrize("w", [8, 16, 32])
+@pytest.mark.parametrize("metric", [0.0, 1.0])
+def test_distance_map_matches_ref(rng, w, metric):
+    win = totals(rng, w, density=0.2)
+    r = jnp.float32(w / 2.5)
+    got = ns.masked_distance_map(jnp.array(win), r, jnp.float32(metric))
+    dy, dx = ref._pixel_offsets(w)
+    dist = jnp.where(metric > 0.5, jnp.abs(dx) + jnp.abs(dy), dx * dx + dy * dy)
+    limit = jnp.where(metric > 0.5, r, r * r)
+    want = jnp.where((jnp.array(win) > 0) & (dist <= limit), dist, jnp.inf)
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_empty_window_all_inf(rng):
+    win = np.zeros((16, 16), np.float32)
+    got = ns.masked_distance_map(jnp.array(win), jnp.float32(8), jnp.float32(0))
+    assert np.all(np.isinf(np.asarray(got)))
+
+
+def test_model_topk_returns_sorted_hits(rng):
+    win = totals(rng, 32, density=0.1)
+    fn = model.make_neighbor_scan(32)
+    dists, idx = fn(jnp.array(win), jnp.float32(12), jnp.float32(0))
+    d = np.asarray(dists)
+    i = np.asarray(idx)
+    live = np.isfinite(d)
+    # ascending among live entries, -1 padding elsewhere
+    assert np.all(np.diff(d[live]) >= 0)
+    assert np.all(i[~live] == -1)
+    # every live index points at an occupied in-circle pixel
+    for dist_val, flat in zip(d[live], i[live]):
+        y, x = divmod(int(flat), 32)
+        assert win[y, x] > 0
+        dd = (y - 16) ** 2 + (x - 16) ** 2
+        assert dd <= 12 * 12
+        assert abs(dd - dist_val) < 1e-5
+
+
+def test_model_matches_oracle(rng):
+    win = totals(rng, 24, density=0.15)
+    fn = model.make_neighbor_scan(24)
+    got_d, got_i = fn(jnp.array(win), jnp.float32(9), jnp.float32(0))
+    want_d, want_i = ref.neighbor_scan_ref(jnp.array(win), jnp.float32(9), jnp.float32(0))
+    assert_allclose(np.asarray(got_d), np.asarray(want_d))
+    # indices may tie-permute within equal distances; compare sets of
+    # (dist, occupied) pairs instead of raw index order
+    live = np.isfinite(np.asarray(got_d))
+    assert set(np.asarray(got_i)[live].tolist()) == set(np.asarray(want_i)[live].tolist())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    w=st.sampled_from([8, 16, 32]),
+    r=st.floats(min_value=0.5, max_value=20.0),
+    metric=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_hit_counts(w, r, metric, seed):
+    rng = np.random.default_rng(seed)
+    win = totals(rng, w, density=0.08)
+    fn = model.make_neighbor_scan(w)
+    dists, idx = fn(jnp.array(win), jnp.float32(r), jnp.float32(metric))
+    live = int(np.isfinite(np.asarray(dists)).sum())
+    # oracle count of occupied in-circle pixels, capped at K_MAX
+    dy, dx = np.mgrid[0:w, 0:w]
+    dy = dy - w // 2
+    dx = dx - w // 2
+    if metric > 0.5:
+        inside = (np.abs(dx) + np.abs(dy)) <= r
+    else:
+        inside = (dx * dx + dy * dy) <= r * r
+    want = int(((win > 0) & inside).sum())
+    assert live == min(want, ref.K_MAX)

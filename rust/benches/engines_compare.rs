@@ -1,0 +1,98 @@
+//! EXT-ENGINES — full engine comparison (extension beyond the paper):
+//! recall@k and latency percentiles for every engine at serving scale,
+//! the table a practitioner needs before adopting active search.
+//!
+//! Run: `cargo bench --bench engines_compare`
+
+use std::path::Path;
+use std::sync::Arc;
+
+use asnn::bench::Table;
+use asnn::config::SearchMode;
+use asnn::data::synthetic::{generate, generate_queries, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::active_pjrt::ActivePjrtEngine;
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::kdtree::KdTreeEngine;
+use asnn::engine::lsh::{LshEngine, LshParams};
+use asnn::engine::{Neighbor, NnEngine};
+use asnn::runtime::RuntimeService;
+use asnn::util::stats::percentile;
+use asnn::util::timer::Timer;
+
+const N: usize = 100_000;
+const QUERIES: usize = 200;
+const K: usize = 11;
+const RESOLUTION: usize = 3000;
+
+fn recall(hits: &[Neighbor], truth: &[Neighbor]) -> f64 {
+    let ids: Vec<u32> = truth.iter().map(|n| n.id).collect();
+    hits.iter().filter(|h| ids.contains(&h.id)).count() as f64 / truth.len() as f64
+}
+
+fn main() {
+    let data = Arc::new(generate(&SyntheticSpec::paper_default(N, 1213)));
+    let queries = generate_queries(QUERIES, 2, 1214);
+    let brute = BruteEngine::new(data.clone());
+    let truth: Vec<Vec<Neighbor>> =
+        queries.iter().map(|q| brute.knn(q, K).unwrap()).collect();
+
+    let mut engines: Vec<(Box<dyn NnEngine>, String)> = vec![
+        (Box::new(BruteEngine::new(data.clone())), "brute".into()),
+        (Box::new(KdTreeEngine::build(data.clone())), "kdtree".into()),
+        (Box::new(LshEngine::build(data.clone(), LshParams::default())), "lsh".into()),
+        (
+            Box::new(
+                ActiveEngine::new(data.clone(), RESOLUTION, ActiveParams::default()).unwrap(),
+            ),
+            "active-approx".into(),
+        ),
+        (
+            Box::new(
+                ActiveEngine::new(
+                    data.clone(),
+                    RESOLUTION,
+                    ActiveParams { mode: SearchMode::Refined, tolerance: 2, ..Default::default() },
+                )
+                .unwrap(),
+            ),
+            "active-refined".into(),
+        ),
+    ];
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.toml").exists() {
+        let svc = RuntimeService::spawn(artifacts).expect("runtime");
+        engines.push((
+            Box::new(
+                ActivePjrtEngine::new(data, RESOLUTION, ActiveParams::default(), svc).unwrap(),
+            ),
+            "active-pjrt".into(),
+        ));
+    }
+
+    let mut table = Table::new(
+        "EXT-ENGINES recall@11 and latency at N=100k",
+        &["engine", "recall_pct", "p50_us", "p99_us", "mean_work"],
+    );
+    for (engine, name) in &engines {
+        let mut lat = Vec::with_capacity(QUERIES);
+        let mut rec = 0.0;
+        let mut work = 0u64;
+        for (q, t) in queries.iter().zip(&truth) {
+            let timer = Timer::new();
+            let (hits, st) = engine.knn_stats(q, K).unwrap();
+            lat.push(timer.elapsed_secs() * 1e6);
+            rec += recall(&hits, t);
+            work += st.work;
+        }
+        table.row(&[
+            name.clone(),
+            format!("{:.1}", 100.0 * rec / QUERIES as f64),
+            format!("{:.1}", percentile(&mut lat.clone(), 50.0)),
+            format!("{:.1}", percentile(&mut lat, 99.0)),
+            format!("{}", work / QUERIES as u64),
+        ]);
+        eprintln!("{name} done");
+    }
+    table.print();
+}

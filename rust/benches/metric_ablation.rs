@@ -1,0 +1,70 @@
+//! ABL-METRIC — the paper's §3 L1 remark: "When the L1 distance is
+//! taken, the computational cost could be extremely cheap, while the
+//! result would be more roughly approximated than the Euclidean
+//! distance."
+//!
+//! We measure both sides: pixels scanned per query (the cost model —
+//! the L1 diamond covers ~2r² pixels vs. the L2 disk's ~πr²) and
+//! classification agreement vs. exact (L2) kNN.
+//!
+//! Run: `cargo bench --bench metric_ablation`
+
+use std::sync::Arc;
+
+use asnn::bench::Table;
+use asnn::config::Metric;
+use asnn::data::synthetic::{generate, generate_queries, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::NnEngine;
+use asnn::util::timer::Timer;
+
+const N: usize = 30_000;
+const QUERIES: usize = 200;
+const K: usize = 11;
+const RESOLUTION: usize = 3000;
+
+fn main() {
+    let data = Arc::new(generate(&SyntheticSpec::paper_default(N, 991)));
+    let queries = generate_queries(QUERIES, 2, 992);
+    let brute = BruteEngine::new(data.clone());
+    let truth: Vec<u16> = queries.iter().map(|q| brute.classify(q, K).unwrap()).collect();
+
+    let mut table = Table::new(
+        "ABL-METRIC L2 disk vs L1 diamond (N=30k, k=11, 3000^2)",
+        &["metric", "agreement_pct", "mean_pixels_per_query", "mean_query_us", "knn_recall_pct"],
+    );
+    for metric in [Metric::L2, Metric::L1] {
+        let engine = ActiveEngine::new(
+            data.clone(),
+            RESOLUTION,
+            ActiveParams { metric, ..Default::default() },
+        )
+        .unwrap();
+        let mut agree = 0usize;
+        let mut pixels = 0u64;
+        let mut recall_sum = 0.0f64;
+        let t = Timer::new();
+        for (q, want) in queries.iter().zip(&truth) {
+            if engine.classify(q, K).unwrap() == *want {
+                agree += 1;
+            }
+            let (hits, st) = engine.knn_stats(q, K).unwrap();
+            pixels += st.work;
+            let exact = brute.knn(q, K).unwrap();
+            let ids: Vec<u32> = exact.iter().map(|n| n.id).collect();
+            recall_sum +=
+                hits.iter().filter(|h| ids.contains(&h.id)).count() as f64 / K as f64;
+        }
+        let secs = t.elapsed_secs();
+        table.row(&[
+            metric.name().to_string(),
+            format!("{:.1}", 100.0 * agree as f64 / QUERIES as f64),
+            format!("{:.0}", pixels as f64 / QUERIES as f64),
+            format!("{:.1}", secs * 1e6 / (2 * QUERIES) as f64),
+            format!("{:.1}", 100.0 * recall_sum / QUERIES as f64),
+        ]);
+    }
+    table.print();
+    println!("expected shape: L1 scans fewer pixels (2r² vs πr²) but recalls/agrees slightly worse.");
+}

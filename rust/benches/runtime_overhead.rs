@@ -1,0 +1,108 @@
+//! RUNTIME — PJRT dispatch overhead and batch amortization: what one
+//! `disk_count` execution costs per window size vs. the native rust
+//! scan, and how much the b16 batch artifact amortizes. Grounds the
+//! §Perf discussion of when the AOT path wins (it is built for TPU-
+//! sized windows; on CPU-PJRT the dispatch overhead dominates small
+//! windows — measured here, not guessed).
+//!
+//! Skips (prints a notice) when artifacts are absent.
+//!
+//! Run: `cargo bench --bench runtime_overhead`
+
+use std::path::Path;
+
+use asnn::bench::{run, BenchResult, BenchSpec, Table};
+use asnn::config::Metric;
+use asnn::active::scan;
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::grid::MultiGrid;
+use asnn::runtime::RuntimeService;
+
+fn main() {
+    scan_generations();
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.toml").exists() {
+        println!("runtime_overhead: artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let svc = RuntimeService::spawn(artifacts).expect("runtime");
+    let ds = generate(&SyntheticSpec::paper_default(50_000, 1301));
+    let grid = MultiGrid::build(&ds, 3000).unwrap();
+
+    let mut table = Table::new(
+        "RUNTIME disk_count per-call cost: PJRT artifact vs native scan",
+        &["window", "pjrt_mean", "pjrt_b16_per_q", "native_mean", "ratio"],
+    );
+    let (cx, cy) = (1500u32, 1500u32);
+    for &w in &svc.disk_count_windows() {
+        let r = (w as u32 - 1) / 2;
+        let name = format!("disk_count_w{w}_b1");
+        let mut window = vec![0f32; 3 * w * w];
+        grid.crop_classes_f32(cx, cy, w, &mut window);
+        let pjrt = run(&BenchSpec::quick(format!("pjrt w{w}")), || {
+            svc.disk_count(&name, window.clone(), r as f32, 11.0, false).unwrap();
+        });
+        // batched variant (per-query amortized)
+        let b16 = format!("disk_count_w{w}_b16");
+        let b16_per_q = if svc.meta(&b16).is_some() {
+            let mut windows = vec![0f32; 16 * 3 * w * w];
+            for i in 0..16 {
+                windows[i * 3 * w * w..(i + 1) * 3 * w * w].copy_from_slice(&window);
+            }
+            let res = run(&BenchSpec::quick(format!("pjrt w{w} b16")), || {
+                svc.disk_count_batch(&b16, windows.clone(), vec![r as f32; 16], 11.0, false)
+                    .unwrap();
+            });
+            format!("{:.1}us", res.mean_secs * 1e6 / 16.0)
+        } else {
+            "n/a".into()
+        };
+        let native = run(&BenchSpec::quick(format!("native r{r}")), || {
+            std::hint::black_box(scan::count_in_disk(&grid, cx, cy, r, Metric::L2));
+        });
+        table.row(&[
+            w.to_string(),
+            fmt(&pjrt),
+            b16_per_q,
+            fmt(&native),
+            format!("{:.1}x", pjrt.mean_secs / native.mean_secs),
+        ]);
+        eprintln!("w={w} done");
+    }
+    table.print();
+}
+
+fn fmt(r: &BenchResult) -> String {
+    format!("{:.1}us", r.mean_secs * 1e6)
+}
+
+/// §Perf: the three generations of the disk-count hot path.
+/// naive O(πr²) per-pixel test → rowspan O(πr²) sequential sums →
+/// prefix O(r) span lookups.
+fn scan_generations() {
+    let ds = generate(&SyntheticSpec::paper_default(100_000, 1302));
+    let grid = MultiGrid::build(&ds, 3000).unwrap();
+    let mut table = Table::new(
+        "PERF-L3 disk-count generations (100k pts, 3000^2)",
+        &["radius", "naive", "rowspan", "prefix", "speedup_total"],
+    );
+    for &r in &[50u32, 100, 300, 1000] {
+        let naive = run(&BenchSpec::quick(format!("naive r{r}")), || {
+            std::hint::black_box(scan::count_in_disk_naive(&grid, 1500, 1500, r, Metric::L2));
+        });
+        let rowspan = run(&BenchSpec::quick(format!("rowspan r{r}")), || {
+            std::hint::black_box(scan::count_in_disk_rowspan(&grid, 1500, 1500, r, Metric::L2));
+        });
+        let prefix = run(&BenchSpec::quick(format!("prefix r{r}")), || {
+            std::hint::black_box(scan::count_in_disk(&grid, 1500, 1500, r, Metric::L2));
+        });
+        table.row(&[
+            r.to_string(),
+            fmt(&naive),
+            fmt(&rowspan),
+            fmt(&prefix),
+            format!("{:.0}x", naive.mean_secs / prefix.mean_secs),
+        ]);
+    }
+    table.print();
+}

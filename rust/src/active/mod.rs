@@ -1,0 +1,40 @@
+//! The paper's active-search machinery, decomposed:
+//!
+//! - [`radius`] — the Eq. 1 radius-update policy plus the convergence
+//!   guards a production system needs (bracketing/bisection, max-iter);
+//! - [`scan`] — circle counting and candidate collection over the count
+//!   image (the computational hot spot the paper discusses in §3);
+//! - [`window`] — static window-size selection for the AOT-compiled
+//!   PJRT artifacts (the "zoom level" of the visual-system metaphor).
+
+pub mod radius;
+pub mod scan;
+pub mod window;
+
+/// One step of an active search, recorded for traces and Fig. 2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchStep {
+    /// Radius used this iteration (pixels).
+    pub r: u32,
+    /// Points counted inside the circle.
+    pub n: u64,
+}
+
+/// Full trace of an active search (for Fig. 2 and diagnostics).
+#[derive(Debug, Clone, Default)]
+pub struct SearchTrace {
+    pub steps: Vec<SearchStep>,
+    /// True if the loop ended by |n−k| ≤ tolerance, false if it hit the
+    /// max-iteration guard or the radius cap.
+    pub converged: bool,
+}
+
+impl SearchTrace {
+    pub fn iterations(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn final_radius(&self) -> Option<u32> {
+        self.steps.last().map(|s| s.r)
+    }
+}

@@ -1,0 +1,259 @@
+//! Radius-adaptation policy.
+//!
+//! The paper's Eq. 1 update is `r ← round(r·√(k/n))`, derived from the
+//! count being proportional to circle area. Used verbatim it has three
+//! failure modes a serving system must handle:
+//!
+//! 1. `n = 0` — the update divides by zero. We double the radius.
+//! 2. **Oscillation** — `round` can cycle between a radius with `n < k`
+//!    and one with `n > k` without ever hitting `n = k` (point counts
+//!    are integers; no radius with exactly `k` may exist for the
+//!    pixel-quantized circle). We detect the bracket and bisect.
+//! 3. **Unbounded growth** — queries in empty corners push `r` past the
+//!    image; we cap at the image diagonal and stop.
+//!
+//! `tolerance = 0` and a pure Eq.-1 trajectory reproduce the paper's
+//! algorithm exactly until the first oscillation.
+
+/// Outcome of one policy step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// |n − k| within tolerance: stop, current circle is the answer.
+    Done,
+    /// Try this radius next.
+    Continue(u32),
+    /// No radius with n ≈ k exists (bracket collapsed) — the caller
+    /// should accept the better bracket side (carried radius).
+    Settle(u32),
+    /// Radius/iteration budget exhausted.
+    Exhausted,
+}
+
+/// Eq. 1 with guards. Create one per query.
+#[derive(Debug, Clone)]
+pub struct RadiusPolicy {
+    k: u64,
+    tolerance: u64,
+    max_iters: u32,
+    r_max: u32,
+    iters: u32,
+    /// Count-growth exponent: 2 for the paper's image (n ∝ area ∝ r²),
+    /// 3 for the volume extension (n ∝ r³).
+    dim_exp: f64,
+    /// Largest radius seen with n < k.
+    lo: Option<u32>,
+    /// Smallest radius seen with n > k.
+    hi: Option<u32>,
+}
+
+impl RadiusPolicy {
+    /// `r_max` is typically the image diagonal in pixels.
+    pub fn new(k: usize, tolerance: u32, max_iters: u32, r_max: u32) -> Self {
+        Self::with_exponent(k, tolerance, max_iters, r_max, 2.0)
+    }
+
+    /// Generalized policy: `n ∝ r^dim_exp` (the d-dimensional Eq. 1 —
+    /// DESIGN.md §5, used by the 3-D volume extension).
+    pub fn with_exponent(
+        k: usize,
+        tolerance: u32,
+        max_iters: u32,
+        r_max: u32,
+        dim_exp: f64,
+    ) -> Self {
+        assert!(dim_exp >= 1.0);
+        Self {
+            k: k as u64,
+            tolerance: tolerance as u64,
+            max_iters,
+            r_max: r_max.max(1),
+            iters: 0,
+            dim_exp,
+            lo: None,
+            hi: None,
+        }
+    }
+
+    /// The paper's Eq. 1, exposed for tests and the PJRT artifact check.
+    pub fn eq1(r: u32, k: u64, n: u64) -> u32 {
+        Self::eq1_dim(r, k, n, 2.0)
+    }
+
+    /// d-dimensional Eq. 1: r ← round(r·(k/n)^(1/d)).
+    pub fn eq1_dim(r: u32, k: u64, n: u64, dim_exp: f64) -> u32 {
+        debug_assert!(n > 0);
+        let next = (r as f64 * (k as f64 / n as f64).powf(1.0 / dim_exp)).round();
+        next.max(1.0) as u32
+    }
+
+    /// Feed the observation `(r, n)`; get the next action.
+    pub fn step(&mut self, r: u32, n: u64) -> Step {
+        self.iters += 1;
+        if n.abs_diff(self.k) <= self.tolerance {
+            return Step::Done;
+        }
+        if self.iters >= self.max_iters {
+            return Step::Exhausted;
+        }
+
+        // maintain the bracket
+        if n < self.k {
+            self.lo = Some(self.lo.map_or(r, |lo| lo.max(r)));
+        } else {
+            self.hi = Some(self.hi.map_or(r, |hi| hi.min(r)));
+        }
+
+        // bracket collapsed: radii differ by ≤1 yet neither hits k —
+        // no integer radius attains n = k. Settle on the ≥k side so the
+        // circle contains at least k points (refinement can trim).
+        if let (Some(lo), Some(hi)) = (self.lo, self.hi) {
+            if hi <= lo + 1 {
+                return Step::Settle(hi);
+            }
+        }
+
+        let mut next = if n == 0 {
+            // Eq. 1 is undefined at n = 0 (paper doesn't treat it);
+            // exponential growth mirrors the "zoom out" step.
+            r.saturating_mul(2)
+        } else {
+            Self::eq1_dim(r, self.k, n, self.dim_exp)
+        };
+
+        // inside a bracket, keep the iterate strictly interior
+        // (plain Eq. 1 can jump outside and oscillate forever)
+        if let (Some(lo), Some(hi)) = (self.lo, self.hi) {
+            if next <= lo || next >= hi {
+                next = lo + (hi - lo) / 2;
+            }
+        }
+        if next == r {
+            // round() fix-point without convergence: nudge toward k
+            next = if n < self.k { r + 1 } else { r.saturating_sub(1).max(1) };
+        }
+        if next > self.r_max {
+            if self.hi.is_some() {
+                // should not happen (hi bounds growth), but stay safe
+                return Step::Settle(self.hi.unwrap());
+            }
+            if r >= self.r_max {
+                return Step::Exhausted;
+            }
+            next = self.r_max;
+        }
+        Step::Continue(next)
+    }
+
+    pub fn iterations(&self) -> u32 {
+        self.iters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_matches_paper_examples() {
+        // n == k keeps the radius
+        assert_eq!(RadiusPolicy::eq1(100, 11, 11), 100);
+        // too many points shrinks, too few grows, by the area ratio
+        assert_eq!(RadiusPolicy::eq1(100, 11, 44), 50);
+        assert_eq!(RadiusPolicy::eq1(50, 8, 2), 100);
+        // never returns 0
+        assert_eq!(RadiusPolicy::eq1(1, 1, 1_000_000), 1);
+    }
+
+    #[test]
+    fn done_within_tolerance() {
+        let mut p = RadiusPolicy::new(11, 0, 10, 1000);
+        assert_eq!(p.step(100, 11), Step::Done);
+        let mut p = RadiusPolicy::new(11, 2, 10, 1000);
+        assert_eq!(p.step(100, 13), Step::Done);
+        assert_eq!(p.step(100, 9), Step::Done);
+    }
+
+    #[test]
+    fn zero_count_doubles() {
+        let mut p = RadiusPolicy::new(11, 0, 10, 100_000);
+        match p.step(100, 0) {
+            Step::Continue(r) => assert_eq!(r, 200),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn growth_capped_at_r_max() {
+        let mut p = RadiusPolicy::new(11, 0, 50, 150);
+        match p.step(100, 0) {
+            Step::Continue(r) => assert_eq!(r, 150),
+            s => panic!("{s:?}"),
+        }
+        // at the cap with still nothing: exhausted
+        assert_eq!(p.step(150, 0), Step::Exhausted);
+    }
+
+    #[test]
+    fn oscillation_settles_on_upper_bracket() {
+        // r=10 → n=9 (<k), r=11 → n=15 (>k): no radius gives exactly 11
+        let mut p = RadiusPolicy::new(11, 0, 50, 1000);
+        let s1 = p.step(10, 9);
+        assert!(matches!(s1, Step::Continue(_)), "{s1:?}");
+        let s2 = p.step(11, 15);
+        assert_eq!(s2, Step::Settle(11));
+    }
+
+    #[test]
+    fn bracket_forces_interior_iterate() {
+        let mut p = RadiusPolicy::new(100, 0, 50, 10_000);
+        // lo=10 (n too small), hi=100 (n too big)
+        assert!(matches!(p.step(10, 5), Step::Continue(_)));
+        let next = match p.step(100, 500) {
+            Step::Continue(r) => r,
+            s => panic!("{s:?}"),
+        };
+        assert!(next > 10 && next < 100, "next={next}");
+    }
+
+    #[test]
+    fn max_iters_exhausts() {
+        let mut p = RadiusPolicy::new(11, 0, 3, 100_000);
+        assert!(matches!(p.step(1, 0), Step::Continue(_)));
+        assert!(matches!(p.step(2, 0), Step::Continue(_)));
+        assert_eq!(p.step(4, 0), Step::Exhausted);
+        assert_eq!(p.iterations(), 3);
+    }
+
+    #[test]
+    fn fixpoint_nudges() {
+        // round(5 * sqrt(11/10)) = round(5.24) = 5 → would spin forever
+        let mut p = RadiusPolicy::new(11, 0, 50, 1000);
+        match p.step(5, 10) {
+            Step::Continue(r) => assert_eq!(r, 6),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn converges_on_synthetic_area_model() {
+        // ideal model: n(r) = round(density * π r²); policy should reach
+        // |n−k| ≤ 0 or settle within a few iterations for many densities
+        for &density in &[0.001, 0.01, 0.1, 1.0] {
+            let count = |r: u32| ((r as f64).powi(2) * std::f64::consts::PI * density).round() as u64;
+            let mut p = RadiusPolicy::new(11, 0, 64, 100_000);
+            let mut r = 100u32;
+            let mut done = false;
+            for _ in 0..64 {
+                match p.step(r, count(r)) {
+                    Step::Done | Step::Settle(_) => {
+                        done = true;
+                        break;
+                    }
+                    Step::Continue(next) => r = next,
+                    Step::Exhausted => break,
+                }
+            }
+            assert!(done, "density {density} did not converge");
+        }
+    }
+}

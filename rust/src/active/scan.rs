@@ -1,0 +1,298 @@
+//! Circle scans over the count image — the computational hot spot.
+//!
+//! The paper (§3): "Most of the computational cost comes from checking
+//! all the inner pixels of the current circle." The production scan
+//! avoids a per-pixel distance test by computing, for each row `dy`,
+//! the half-span of the disk: `dx ≤ √(r²−dy²)` (L2) or `dx ≤ r−|dy|`
+//! (L1 diamond), then summing contiguous `u16` runs — sequential,
+//! branch-light, SIMD-friendly. A naive per-pixel variant is kept as
+//! the test oracle and the §Perf "before" baseline.
+
+use crate::config::Metric;
+use crate::grid::MultiGrid;
+
+/// Inclusive pixel span `[x0, x1]` of a disk row, clipped to the image.
+#[inline]
+fn row_span(cx: i64, half: i64, res: i64) -> Option<(usize, usize)> {
+    let x0 = (cx - half).max(0);
+    let x1 = (cx + half).min(res - 1);
+    if x0 > x1 {
+        None
+    } else {
+        Some((x0 as usize, x1 as usize))
+    }
+}
+
+/// Half-span of the disk at vertical offset `dy` (pixels), or None if
+/// the row is outside the disk.
+#[inline]
+fn half_span(r: u32, dy: i64, metric: Metric) -> Option<i64> {
+    let r = r as i64;
+    let ady = dy.abs();
+    if ady > r {
+        return None;
+    }
+    Some(match metric {
+        Metric::L2 => {
+            let rem = (r * r - dy * dy) as f64;
+            rem.sqrt().floor() as i64
+        }
+        Metric::L1 => r - ady,
+    })
+}
+
+/// Count all points inside the disk of radius `r` (pixels) centered at
+/// `(cx, cy)`. O(r): one O(1) prefix-table span lookup per disk row
+/// (§Perf: replaced the O(πr²) per-pixel accumulation — see
+/// [`count_in_disk_rowspan`] for the previous generation and
+/// [`count_in_disk_naive`] for the original baseline).
+pub fn count_in_disk(grid: &MultiGrid, cx: u32, cy: u32, r: u32, metric: Metric) -> u64 {
+    let res = grid.resolution() as i64;
+    let (cx, cy) = (cx as i64, cy as i64);
+    let mut total = 0u64;
+    let dy_lo = (-(r as i64)).max(-cy);
+    let dy_hi = (r as i64).min(res - 1 - cy);
+    for dy in dy_lo..=dy_hi {
+        let Some(half) = half_span(r, dy, metric) else { continue };
+        let Some((x0, x1)) = row_span(cx, half, res) else { continue };
+        total += grid.row_span_count((cy + dy) as u32, x0 as u32, x1 as u32) as u64;
+    }
+    total
+}
+
+/// Previous-generation scan: contiguous `u16` row sums (O(πr²) touched
+/// pixels, but sequential). Kept for the §Perf before/after and as a
+/// second oracle.
+pub fn count_in_disk_rowspan(grid: &MultiGrid, cx: u32, cy: u32, r: u32, metric: Metric) -> u64 {
+    let res = grid.resolution() as i64;
+    let (cx, cy) = (cx as i64, cy as i64);
+    let mut total = 0u64;
+    let dy_lo = (-(r as i64)).max(-cy);
+    let dy_hi = (r as i64).min(res - 1 - cy);
+    for dy in dy_lo..=dy_hi {
+        let Some(half) = half_span(r, dy, metric) else { continue };
+        let Some((x0, x1)) = row_span(cx, half, res) else { continue };
+        let row = grid.total_row((cy + dy) as u32);
+        let mut s = 0u32;
+        for &v in &row[x0..=x1] {
+            s += v as u32;
+        }
+        total += s as u64;
+    }
+    total
+}
+
+/// Naive per-pixel oracle for [`count_in_disk`] (tests + §Perf baseline).
+pub fn count_in_disk_naive(grid: &MultiGrid, cx: u32, cy: u32, r: u32, metric: Metric) -> u64 {
+    let res = grid.resolution() as i64;
+    let (cx, cy) = (cx as i64, cy as i64);
+    let mut total = 0u64;
+    for dy in -(r as i64)..=(r as i64) {
+        for dx in -(r as i64)..=(r as i64) {
+            let inside = match metric {
+                Metric::L2 => dx * dx + dy * dy <= (r as i64) * (r as i64),
+                Metric::L1 => dx.abs() + dy.abs() <= r as i64,
+            };
+            if !inside {
+                continue;
+            }
+            let x = cx + dx;
+            let y = cy + dy;
+            if x >= 0 && x < res && y >= 0 && y < res {
+                total += grid.count_at(x as u32, y as u32) as u64;
+            }
+        }
+    }
+    total
+}
+
+/// Per-class counts inside the disk (the paper's classification vote:
+/// one count image per class). `out.len() == grid.num_classes()`.
+/// Bucket-driven: one binary-search pair per disk row, then only the
+/// points actually inside are touched — O(r·log N + hits) instead of
+/// O(πr²) pixel reads (§Perf).
+pub fn class_counts_in_disk(
+    grid: &MultiGrid,
+    cx: u32,
+    cy: u32,
+    r: u32,
+    metric: Metric,
+    out: &mut [u64],
+) {
+    assert_eq!(out.len(), grid.num_classes());
+    out.fill(0);
+    let res = grid.resolution() as i64;
+    let (cxi, cyi) = (cx as i64, cy as i64);
+    let dy_lo = (-(r as i64)).max(-cyi);
+    let dy_hi = (r as i64).min(res - 1 - cyi);
+    for dy in dy_lo..=dy_hi {
+        let Some(half) = half_span(r, dy, metric) else { continue };
+        let Some((x0, x1)) = row_span(cxi, half, res) else { continue };
+        let y = (cyi + dy) as u32;
+        let cell0 = y * res as u32 + x0 as u32;
+        let cell1 = y * res as u32 + x1 as u32;
+        for &(_, pid) in grid.points_in_cell_range(cell0, cell1) {
+            out[grid.label_of(pid) as usize] += 1;
+        }
+    }
+}
+
+/// A candidate point recovered from the final circle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub point_id: u32,
+    /// Pixel-space squared distance (L2) or L1 distance from the query
+    /// pixel to the candidate's pixel — the paper's retina-space metric.
+    pub pixel_dist: f64,
+}
+
+/// Collect point ids of every occupied pixel in the disk, with their
+/// pixel-space distances (used by both `approx` and `refined` modes).
+/// Bucket-driven like [`class_counts_in_disk`] (§Perf).
+pub fn collect_in_disk(
+    grid: &MultiGrid,
+    cx: u32,
+    cy: u32,
+    r: u32,
+    metric: Metric,
+) -> Vec<Candidate> {
+    let res = grid.resolution() as i64;
+    let (cxi, cyi) = (cx as i64, cy as i64);
+    let mut out = Vec::new();
+    let dy_lo = (-(r as i64)).max(-cyi);
+    let dy_hi = (r as i64).min(res - 1 - cyi);
+    for dy in dy_lo..=dy_hi {
+        let Some(half) = half_span(r, dy, metric) else { continue };
+        let Some((x0, x1)) = row_span(cxi, half, res) else { continue };
+        let y = (cyi + dy) as u32;
+        let cell0 = y * res as u32 + x0 as u32;
+        let cell1 = y * res as u32 + x1 as u32;
+        for &(cell, pid) in grid.points_in_cell_range(cell0, cell1) {
+            let dx = (cell - y * res as u32) as i64 - cxi;
+            let pixel_dist = match metric {
+                Metric::L2 => (dx * dx + dy * dy) as f64,
+                Metric::L1 => (dx.abs() + dy.abs()) as f64,
+            };
+            out.push(Candidate { point_id: pid, pixel_dist });
+        }
+    }
+    out
+}
+
+/// Number of pixels a disk scan touches (cost model for §Perf and the
+/// resolution ablation).
+pub fn disk_pixels(r: u32, metric: Metric) -> u64 {
+    let r = r as i64;
+    let mut n = 0u64;
+    for dy in -r..=r {
+        if let Some(half) = half_span(r as u32, dy, metric) {
+            n += (2 * half + 1) as u64;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn grid(n: usize, res: usize) -> MultiGrid {
+        let ds = generate(&SyntheticSpec::paper_default(n, 21));
+        MultiGrid::build(&ds, res).unwrap()
+    }
+
+    #[test]
+    fn fast_scan_matches_naive_l2() {
+        let g = grid(2000, 200);
+        for &(cx, cy, r) in &[(100, 100, 10), (100, 100, 50), (5, 5, 20), (199, 0, 30), (0, 199, 7)] {
+            assert_eq!(
+                count_in_disk(&g, cx, cy, r, Metric::L2),
+                count_in_disk_naive(&g, cx, cy, r, Metric::L2),
+                "cx={cx} cy={cy} r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn fast_scan_matches_naive_l1() {
+        let g = grid(2000, 200);
+        for &(cx, cy, r) in &[(100, 100, 10), (100, 100, 60), (3, 190, 25)] {
+            assert_eq!(
+                count_in_disk(&g, cx, cy, r, Metric::L1),
+                count_in_disk_naive(&g, cx, cy, r, Metric::L1),
+                "cx={cx} cy={cy} r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_scan_matches_rowspan_scan() {
+        let g = grid(3000, 250);
+        for &(cx, cy, r) in &[(125, 125, 5), (125, 125, 80), (0, 0, 60), (249, 100, 33)] {
+            for metric in [Metric::L2, Metric::L1] {
+                assert_eq!(
+                    count_in_disk(&g, cx, cy, r, metric),
+                    count_in_disk_rowspan(&g, cx, cy, r, metric),
+                    "cx={cx} cy={cy} r={r} {metric:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_image_disk_counts_everything() {
+        let g = grid(1000, 100);
+        // radius covering the whole image (diagonal)
+        let n = count_in_disk(&g, 50, 50, 200, Metric::L2);
+        assert_eq!(n, 1000);
+    }
+
+    #[test]
+    fn zero_radius_counts_center_pixel() {
+        let g = grid(1000, 100);
+        let n = count_in_disk(&g, 10, 10, 0, Metric::L2);
+        assert_eq!(n, g.count_at(10, 10) as u64);
+    }
+
+    #[test]
+    fn class_counts_sum_to_total() {
+        let g = grid(3000, 150);
+        let mut cls = vec![0u64; 3];
+        for &(cx, cy, r) in &[(75, 75, 20), (10, 140, 35)] {
+            class_counts_in_disk(&g, cx, cy, r, Metric::L2, &mut cls);
+            let total = count_in_disk(&g, cx, cy, r, Metric::L2);
+            assert_eq!(cls.iter().sum::<u64>(), total);
+        }
+    }
+
+    #[test]
+    fn collect_matches_count() {
+        let g = grid(1500, 120);
+        for &(cx, cy, r) in &[(60, 60, 15), (0, 0, 40)] {
+            let cands = collect_in_disk(&g, cx, cy, r, Metric::L2);
+            let n = count_in_disk(&g, cx, cy, r, Metric::L2);
+            assert_eq!(cands.len() as u64, n);
+            // all pixel distances within r² for L2
+            for c in &cands {
+                assert!(c.pixel_dist <= (r as f64) * (r as f64) + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn l1_disk_is_subset_of_l2_disk() {
+        let g = grid(2000, 150);
+        let l1 = count_in_disk(&g, 75, 75, 30, Metric::L1);
+        let l2 = count_in_disk(&g, 75, 75, 30, Metric::L2);
+        assert!(l1 <= l2, "l1={l1} l2={l2}");
+    }
+
+    #[test]
+    fn disk_pixels_close_to_area() {
+        // L2 pixel count ≈ πr²; L1 diamond = 2r²+2r+1
+        let p2 = disk_pixels(100, Metric::L2) as f64;
+        assert!((p2 - std::f64::consts::PI * 100.0 * 100.0).abs() / p2 < 0.02);
+        assert_eq!(disk_pixels(100, Metric::L1), 2 * 100 * 100 + 2 * 100 + 1);
+    }
+}

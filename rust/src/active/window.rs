@@ -1,0 +1,82 @@
+//! Window-scale selection for the AOT artifact path.
+//!
+//! PJRT executables are shape-specialized, so the L2 model is lowered
+//! once per window size (DESIGN.md §1). At query time the coordinator
+//! picks the smallest compiled window that contains the current scan
+//! circle — the discrete "zoom level".
+
+/// Chooses among a fixed ascending set of compiled window sizes.
+#[derive(Debug, Clone)]
+pub struct WindowLadder {
+    sizes: Vec<usize>,
+}
+
+impl WindowLadder {
+    /// `sizes` must be non-empty; stored sorted ascending, deduped.
+    pub fn new(mut sizes: Vec<usize>) -> Self {
+        assert!(!sizes.is_empty(), "window ladder needs at least one size");
+        sizes.sort_unstable();
+        sizes.dedup();
+        Self { sizes }
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    pub fn largest(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Smallest window that fully contains a disk of radius `r`
+    /// (diameter `2r+1`), or `None` if even the largest is too small —
+    /// the caller then falls back to the native scan (or tiles).
+    pub fn select(&self, r: u32) -> Option<usize> {
+        let need = 2 * r as usize + 1;
+        self.sizes.iter().copied().find(|&w| w >= need)
+    }
+
+    /// Largest radius servable by any compiled window.
+    pub fn max_radius(&self) -> u32 {
+        ((self.largest() - 1) / 2) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> WindowLadder {
+        WindowLadder::new(vec![512, 64, 128, 256, 128])
+    }
+
+    #[test]
+    fn sorted_and_deduped() {
+        assert_eq!(ladder().sizes(), &[64, 128, 256, 512]);
+    }
+
+    #[test]
+    fn selects_smallest_fitting() {
+        let l = ladder();
+        assert_eq!(l.select(10), Some(64)); // needs 21
+        assert_eq!(l.select(31), Some(64)); // needs 63
+        assert_eq!(l.select(32), Some(128)); // needs 65
+        assert_eq!(l.select(127), Some(256));
+        assert_eq!(l.select(255), Some(512));
+        assert_eq!(l.select(256), None); // needs 513
+    }
+
+    #[test]
+    fn max_radius_consistent_with_select() {
+        let l = ladder();
+        let rmax = l.max_radius();
+        assert!(l.select(rmax).is_some());
+        assert!(l.select(rmax + 1).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_ladder_panics() {
+        WindowLadder::new(vec![]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Measurement core: warmup, adaptive iteration count, percentile
+//! stats, and table output.
+
+use crate::util::stats::{percentile, Welford};
+use crate::util::timer::{fmt_duration, Timer};
+
+/// What to measure and for how long.
+#[derive(Debug, Clone)]
+pub struct BenchSpec {
+    pub name: String,
+    /// Warmup wall-time budget (seconds).
+    pub warmup_secs: f64,
+    /// Measurement wall-time budget (seconds).
+    pub measure_secs: f64,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    /// Minimum measured iterations (even past the time budget).
+    pub min_iters: usize,
+}
+
+impl BenchSpec {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup_secs: 0.2,
+            measure_secs: 1.0,
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+
+    /// Faster profile for long-running end-to-end benches.
+    pub fn quick(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup_secs: 0.05,
+            measure_secs: 0.3,
+            max_iters: 1_000,
+            min_iters: 3,
+        }
+    }
+}
+
+/// Aggregated measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10} {:>10} {:>10} {:>10} {:>6}",
+            self.name,
+            fmt_duration(self.mean_secs),
+            fmt_duration(self.p50_secs),
+            fmt_duration(self.p99_secs),
+            fmt_duration(self.max_secs),
+            self.iters
+        )
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<40} {:>10} {:>10} {:>10} {:>10} {:>6}",
+            "benchmark", "mean", "p50", "p99", "max", "iters"
+        )
+    }
+}
+
+/// Run one benchmark: `f` is a single measured operation.
+pub fn run(spec: &BenchSpec, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    let t = Timer::new();
+    while t.elapsed_secs() < spec.warmup_secs {
+        f();
+    }
+    // measure
+    let mut samples = Vec::new();
+    let mut w = Welford::new();
+    let total = Timer::new();
+    while (total.elapsed_secs() < spec.measure_secs || samples.len() < spec.min_iters)
+        && samples.len() < spec.max_iters
+    {
+        let it = Timer::new();
+        f();
+        let s = it.elapsed_secs();
+        samples.push(s);
+        w.push(s);
+    }
+    BenchResult {
+        name: spec.name.clone(),
+        iters: samples.len(),
+        mean_secs: w.mean(),
+        std_secs: w.std(),
+        p50_secs: percentile(&mut samples.clone(), 50.0),
+        p99_secs: percentile(&mut samples, 99.0),
+        min_secs: w.min(),
+        max_secs: w.max(),
+    }
+}
+
+/// Aligned text table that doubles as CSV (for EXPERIMENTS.md series).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Aligned human-readable rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable CSV rendering.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print both renderings (csv fenced for easy scraping).
+    pub fn print(&self) {
+        println!("{}", self.render());
+        println!("csv:{}", self.title.replace(' ', "_"));
+        print!("{}", self.to_csv());
+        println!("endcsv");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_measures_positive_times() {
+        let spec = BenchSpec {
+            name: "noop".into(),
+            warmup_secs: 0.0,
+            measure_secs: 0.01,
+            max_iters: 100,
+            min_iters: 5,
+        };
+        let mut count = 0u64;
+        let r = run(&spec, || {
+            count = count.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.p50_secs <= r.p99_secs + 1e-12);
+        assert!(r.min_secs <= r.max_secs);
+    }
+
+    #[test]
+    fn run_respects_max_iters() {
+        let spec = BenchSpec {
+            name: "capped".into(),
+            warmup_secs: 0.0,
+            measure_secs: 10.0,
+            max_iters: 7,
+            min_iters: 1,
+        };
+        let r = run(&spec, || {});
+        assert_eq!(r.iters, 7);
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv() {
+        let mut t = Table::new("fig3", &["n", "engine", "secs"]);
+        t.row(&["1000".into(), "brute".into(), "0.5".into()]);
+        t.row(&["100000".into(), "active".into(), "0.002".into()]);
+        let rendered = t.render();
+        assert!(rendered.contains("fig3"));
+        assert!(rendered.contains("100000"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("n,engine,secs"));
+        assert_eq!(t.num_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-repo benchmark harness (criterion is not in the offline vendor
+//! set): warmup + timed iterations, robust stats, and aligned table /
+//! CSV output so every paper figure can be regenerated as text series.
+
+pub mod harness;
+
+pub use harness::{run, BenchResult, BenchSpec, Table};

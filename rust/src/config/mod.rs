@@ -1,0 +1,371 @@
+//! Typed configuration for the whole stack, loaded from a TOML subset
+//! (see [`crate::util::toml`]). Defaults reproduce the paper's §3 setup:
+//! uniform 2-D points, 3 classes, 3000×3000 image, k = 11, r₀ = 100.
+
+use std::path::Path;
+
+use crate::data::synthetic::Family;
+use crate::error::{AsnnError, Result};
+use crate::util::toml::Document;
+
+/// Distance metric used inside the scan circle (paper §3 discusses the
+/// L1 variant as a cheaper approximation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    L2,
+    L1,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "l2" | "L2" | "euclidean" => Some(Metric::L2),
+            "l1" | "L1" | "manhattan" => Some(Metric::L1),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::L2 => "l2",
+            Metric::L1 => "l1",
+        }
+    }
+}
+
+/// How neighbors are returned by the active engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Paper behaviour: pixel-level result — points in the final circle.
+    Approx,
+    /// Extension: re-rank candidate pixels by true point distance and
+    /// return exact neighbor identities when possible.
+    Refined,
+}
+
+impl SearchMode {
+    pub fn parse(s: &str) -> Option<SearchMode> {
+        match s {
+            "approx" => Some(SearchMode::Approx),
+            "refined" => Some(SearchMode::Refined),
+            _ => None,
+        }
+    }
+}
+
+/// Initial-radius policy (ABL-R0 studies this; paper fixes r₀ = 100).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum R0Policy {
+    /// Fixed pixel radius, the paper's choice.
+    Fixed,
+    /// Estimate from global density: r₀ = sqrt(k / (N / R²)) pixels.
+    Density,
+}
+
+impl R0Policy {
+    pub fn parse(s: &str) -> Option<R0Policy> {
+        match s {
+            "fixed" => Some(R0Policy::Fixed),
+            "density" => Some(R0Policy::Density),
+            _ => None,
+        }
+    }
+}
+
+/// Which engine serves queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Brute,
+    KdTree,
+    Lsh,
+    Active,
+    ActivePjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "brute" => Some(EngineKind::Brute),
+            "kdtree" | "kd" => Some(EngineKind::KdTree),
+            "lsh" => Some(EngineKind::Lsh),
+            "active" => Some(EngineKind::Active),
+            "active-pjrt" | "active_pjrt" | "pjrt" => Some(EngineKind::ActivePjrt),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Brute => "brute",
+            EngineKind::KdTree => "kdtree",
+            EngineKind::Lsh => "lsh",
+            EngineKind::Active => "active",
+            EngineKind::ActivePjrt => "active-pjrt",
+        }
+    }
+}
+
+/// `[data]` section.
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub family: Family,
+    pub n: usize,
+    pub dim: usize,
+    pub num_classes: usize,
+    pub seed: u64,
+}
+
+/// `[grid]` section.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    /// Image side length in pixels (paper: 3000).
+    pub resolution: usize,
+    /// Fractional padding added around the data bounding box so fresh
+    /// queries near the hull still land inside the image.
+    pub padding: f64,
+}
+
+/// `[search]` section.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub k: usize,
+    pub r0: u32,
+    pub max_iters: u32,
+    pub metric: Metric,
+    pub mode: SearchMode,
+    pub r0_policy: R0Policy,
+    /// Accept |n_t − k| ≤ tolerance instead of exact equality (the paper
+    /// requires n_t == k; tolerance 0 reproduces that).
+    pub tolerance: u32,
+}
+
+/// `[server]` section.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub batch_max: usize,
+    pub batch_deadline_us: u64,
+}
+
+/// `[runtime]` section.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: String,
+    /// Static window sizes the AOT artifacts were lowered for.
+    pub window_sizes: Vec<usize>,
+}
+
+/// Top-level config.
+#[derive(Debug, Clone)]
+pub struct AsnnConfig {
+    pub data: DataConfig,
+    pub grid: GridConfig,
+    pub search: SearchConfig,
+    pub engine: EngineKind,
+    pub server: ServerConfig,
+    pub runtime: RuntimeConfig,
+}
+
+impl Default for AsnnConfig {
+    fn default() -> Self {
+        Self {
+            data: DataConfig {
+                family: Family::Uniform,
+                n: 10_000,
+                dim: 2,
+                num_classes: 3,
+                seed: 42,
+            },
+            grid: GridConfig { resolution: 3000, padding: 0.0 },
+            search: SearchConfig {
+                k: 11,
+                r0: 100,
+                max_iters: 64,
+                metric: Metric::L2,
+                mode: SearchMode::Refined,
+                r0_policy: R0Policy::Fixed,
+                tolerance: 0,
+            },
+            engine: EngineKind::Active,
+            server: ServerConfig {
+                addr: "127.0.0.1:7878".into(),
+                workers: 2,
+                batch_max: 16,
+                batch_deadline_us: 200,
+            },
+            runtime: RuntimeConfig {
+                artifacts_dir: "artifacts".into(),
+                window_sizes: vec![64, 128, 256, 512],
+            },
+        }
+    }
+}
+
+impl AsnnConfig {
+    /// Load from a TOML file; unspecified keys keep their defaults.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text; unspecified keys keep their defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = Document::parse(text)?;
+        let mut cfg = AsnnConfig::default();
+
+        let fam = doc.str_or("data", "family", "uniform");
+        cfg.data.family = Family::parse(&fam)
+            .ok_or_else(|| AsnnError::Config(format!("unknown data.family {fam:?}")))?;
+        cfg.data.n = doc.int_or("data", "n", cfg.data.n as i64) as usize;
+        cfg.data.dim = doc.int_or("data", "dim", cfg.data.dim as i64) as usize;
+        cfg.data.num_classes =
+            doc.int_or("data", "classes", cfg.data.num_classes as i64) as usize;
+        cfg.data.seed = doc.int_or("data", "seed", cfg.data.seed as i64) as u64;
+
+        cfg.grid.resolution =
+            doc.int_or("grid", "resolution", cfg.grid.resolution as i64) as usize;
+        cfg.grid.padding = doc.float_or("grid", "padding", cfg.grid.padding);
+
+        cfg.search.k = doc.int_or("search", "k", cfg.search.k as i64) as usize;
+        cfg.search.r0 = doc.int_or("search", "r0", cfg.search.r0 as i64) as u32;
+        cfg.search.max_iters =
+            doc.int_or("search", "max_iters", cfg.search.max_iters as i64) as u32;
+        cfg.search.tolerance =
+            doc.int_or("search", "tolerance", cfg.search.tolerance as i64) as u32;
+        let metric = doc.str_or("search", "metric", cfg.search.metric.name());
+        cfg.search.metric = Metric::parse(&metric)
+            .ok_or_else(|| AsnnError::Config(format!("unknown search.metric {metric:?}")))?;
+        let mode = doc.str_or("search", "mode", "refined");
+        cfg.search.mode = SearchMode::parse(&mode)
+            .ok_or_else(|| AsnnError::Config(format!("unknown search.mode {mode:?}")))?;
+        let pol = doc.str_or("search", "r0_policy", "fixed");
+        cfg.search.r0_policy = R0Policy::parse(&pol)
+            .ok_or_else(|| AsnnError::Config(format!("unknown search.r0_policy {pol:?}")))?;
+
+        let engine = doc.str_or("engine", "kind", cfg.engine.name());
+        cfg.engine = EngineKind::parse(&engine)
+            .ok_or_else(|| AsnnError::Config(format!("unknown engine.kind {engine:?}")))?;
+
+        cfg.server.addr = doc.str_or("server", "addr", &cfg.server.addr);
+        cfg.server.workers =
+            doc.int_or("server", "workers", cfg.server.workers as i64) as usize;
+        cfg.server.batch_max =
+            doc.int_or("server", "batch_max", cfg.server.batch_max as i64) as usize;
+        cfg.server.batch_deadline_us =
+            doc.int_or("server", "batch_deadline_us", cfg.server.batch_deadline_us as i64) as u64;
+
+        cfg.runtime.artifacts_dir =
+            doc.str_or("runtime", "artifacts_dir", &cfg.runtime.artifacts_dir);
+        if let Some(arr) = doc.get("runtime", "window_sizes").and_then(|v| v.as_array()) {
+            cfg.runtime.window_sizes = arr
+                .iter()
+                .filter_map(|v| v.as_int())
+                .map(|v| v as usize)
+                .collect();
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.data.n == 0 {
+            return Err(AsnnError::Config("data.n must be > 0".into()));
+        }
+        if self.data.dim < 2 {
+            return Err(AsnnError::Config("data.dim must be >= 2".into()));
+        }
+        if self.data.num_classes == 0 {
+            return Err(AsnnError::Config("data.classes must be > 0".into()));
+        }
+        if self.grid.resolution < 8 {
+            return Err(AsnnError::Config("grid.resolution must be >= 8".into()));
+        }
+        if !(0.0..0.5).contains(&self.grid.padding) {
+            return Err(AsnnError::Config("grid.padding must be in [0, 0.5)".into()));
+        }
+        if self.search.k == 0 {
+            return Err(AsnnError::Config("search.k must be > 0".into()));
+        }
+        if self.search.k >= self.data.n {
+            return Err(AsnnError::Config(format!(
+                "search.k ({}) must be < data.n ({})",
+                self.search.k, self.data.n
+            )));
+        }
+        if self.search.r0 == 0 {
+            return Err(AsnnError::Config("search.r0 must be > 0".into()));
+        }
+        if self.search.max_iters == 0 {
+            return Err(AsnnError::Config("search.max_iters must be > 0".into()));
+        }
+        if self.server.workers == 0 || self.server.batch_max == 0 {
+            return Err(AsnnError::Config("server.workers/batch_max must be > 0".into()));
+        }
+        if self.runtime.window_sizes.is_empty() {
+            return Err(AsnnError::Config("runtime.window_sizes must be non-empty".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_setup() {
+        let c = AsnnConfig::default();
+        assert_eq!(c.grid.resolution, 3000);
+        assert_eq!(c.search.k, 11);
+        assert_eq!(c.search.r0, 100);
+        assert_eq!(c.data.num_classes, 3);
+        assert_eq!(c.data.dim, 2);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let c = AsnnConfig::from_toml(
+            r#"
+            [data]
+            family = "blobs"
+            n = 5000
+            [search]
+            k = 5
+            metric = "l1"
+            mode = "approx"
+            [engine]
+            kind = "kdtree"
+            [runtime]
+            window_sizes = [32, 64]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.data.family, Family::Blobs);
+        assert_eq!(c.data.n, 5000);
+        assert_eq!(c.search.k, 5);
+        assert_eq!(c.search.metric, Metric::L1);
+        assert_eq!(c.search.mode, SearchMode::Approx);
+        assert_eq!(c.engine, EngineKind::KdTree);
+        assert_eq!(c.runtime.window_sizes, vec![32, 64]);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(AsnnConfig::from_toml("[search]\nk = 0").is_err());
+        assert!(AsnnConfig::from_toml("[data]\nfamily = \"weird\"").is_err());
+        assert!(AsnnConfig::from_toml("[search]\nmetric = \"l7\"").is_err());
+        assert!(AsnnConfig::from_toml("[grid]\nresolution = 2").is_err());
+        assert!(AsnnConfig::from_toml("[data]\nn = 5\n[search]\nk = 11").is_err());
+    }
+
+    #[test]
+    fn enum_parsers() {
+        assert_eq!(Metric::parse("euclidean"), Some(Metric::L2));
+        assert_eq!(SearchMode::parse("refined"), Some(SearchMode::Refined));
+        assert_eq!(R0Policy::parse("density"), Some(R0Policy::Density));
+        assert_eq!(EngineKind::parse("active-pjrt"), Some(EngineKind::ActivePjrt));
+        assert_eq!(EngineKind::parse("bogus"), None);
+    }
+}

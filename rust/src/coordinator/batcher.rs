@@ -1,0 +1,145 @@
+//! Deadline batcher: groups individually-submitted items into batches
+//! of at most `batch_max`, flushing when full or when the oldest item
+//! has waited `deadline`.
+//!
+//! The coordinator uses this to feed same-window-scale queries into the
+//! `disk_count_w*_b16` PJRT artifacts — the paper's serial loop,
+//! vectorized across concurrent clients.
+
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Generic deadline batcher; `process` receives each flushed batch on a
+/// dedicated thread.
+pub struct Batcher<T: Send + 'static> {
+    tx: Option<Sender<T>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Batcher<T> {
+    pub fn new(
+        batch_max: usize,
+        deadline: Duration,
+        process: impl FnMut(Vec<T>) + Send + 'static,
+    ) -> Self {
+        assert!(batch_max > 0);
+        let (tx, rx) = channel::<T>();
+        let mut process = process;
+        let handle = std::thread::Builder::new()
+            .name("asnn-batcher".into())
+            .spawn(move || {
+                loop {
+                    // block for the first item of a batch
+                    let first = match rx.recv() {
+                        Ok(item) => item,
+                        Err(_) => break, // senders gone: shutdown
+                    };
+                    let mut batch = vec![first];
+                    let flush_at = Instant::now() + deadline;
+                    while batch.len() < batch_max {
+                        let now = Instant::now();
+                        if now >= flush_at {
+                            break;
+                        }
+                        match rx.recv_timeout(flush_at - now) {
+                            Ok(item) => batch.push(item),
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => {
+                                process(batch);
+                                return;
+                            }
+                        }
+                    }
+                    process(batch);
+                }
+            })
+            .expect("spawn batcher");
+        Self { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Submit one item; returns false if the batcher has shut down.
+    pub fn submit(&self, item: T) -> bool {
+        match &self.tx {
+            Some(tx) => tx.send(item).is_ok(),
+            None => false,
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for Batcher<T> {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    fn collect_batches(
+        batch_max: usize,
+        deadline_ms: u64,
+    ) -> (Batcher<u32>, Arc<Mutex<Vec<Vec<u32>>>>) {
+        let sink: Arc<Mutex<Vec<Vec<u32>>>> = Arc::new(Mutex::new(Vec::new()));
+        let s = Arc::clone(&sink);
+        let b = Batcher::new(batch_max, Duration::from_millis(deadline_ms), move |batch| {
+            s.lock().unwrap().push(batch);
+        });
+        (b, sink)
+    }
+
+    #[test]
+    fn all_items_processed_exactly_once() {
+        let (b, sink) = collect_batches(8, 5);
+        for i in 0..100 {
+            assert!(b.submit(i));
+        }
+        drop(b);
+        let batches = sink.lock().unwrap();
+        let mut all: Vec<u32> = batches.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batches_respect_max() {
+        let (b, sink) = collect_batches(4, 50);
+        for i in 0..20 {
+            b.submit(i);
+        }
+        drop(b);
+        for batch in sink.lock().unwrap().iter() {
+            assert!(batch.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (b, sink) = collect_batches(1000, 20);
+        b.submit(1);
+        b.submit(2);
+        std::thread::sleep(Duration::from_millis(120));
+        {
+            let batches = sink.lock().unwrap();
+            assert_eq!(batches.len(), 1, "deadline flush missing: {batches:?}");
+            assert_eq!(batches[0], vec![1, 2]);
+        }
+        drop(b);
+    }
+
+    #[test]
+    fn submit_after_drop_reports_false() {
+        let (b, _sink) = collect_batches(4, 5);
+        drop(b);
+        // can't call submit on a dropped value; instead verify a fresh
+        // batcher whose thread exited: simulate via closed channel
+        let (tx, _) = std::sync::mpsc::channel::<u32>();
+        drop(tx);
+        // nothing to assert beyond the drop path not hanging
+    }
+}

@@ -1,0 +1,139 @@
+//! Serving metrics: request counters + latency histograms per verb.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::LatencyHistogram;
+
+/// Shared metrics sink (cheap atomics on the hot path; the histogram
+/// mutex is uncontended at this testbed's request rates).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub knn_requests: AtomicU64,
+    pub classify_requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_queries: AtomicU64,
+    knn_latency: Mutex<LatencyHistogram>,
+    classify_latency: Mutex<LatencyHistogram>,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub knn_requests: u64,
+    pub classify_requests: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub batched_queries: u64,
+    pub knn_mean_us: f64,
+    pub knn_p50_us: f64,
+    pub knn_p99_us: f64,
+    pub classify_mean_us: f64,
+    pub classify_p99_us: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_knn(&self, ns: u64) {
+        self.knn_requests.fetch_add(1, Ordering::Relaxed);
+        self.knn_latency.lock().unwrap().record_ns(ns);
+    }
+
+    pub fn record_classify(&self, ns: u64) {
+        self.classify_requests.fetch_add(1, Ordering::Relaxed);
+        self.classify_latency.lock().unwrap().record_ns(ns);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let knn = self.knn_latency.lock().unwrap().clone();
+        let cls = self.classify_latency.lock().unwrap().clone();
+        MetricsSnapshot {
+            knn_requests: self.knn_requests.load(Ordering::Relaxed),
+            classify_requests: self.classify_requests.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_queries: self.batched_queries.load(Ordering::Relaxed),
+            knn_mean_us: knn.mean_ns() / 1e3,
+            knn_p50_us: knn.quantile_ns(0.5) as f64 / 1e3,
+            knn_p99_us: knn.quantile_ns(0.99) as f64 / 1e3,
+            classify_mean_us: cls.mean_ns() / 1e3,
+            classify_p99_us: cls.quantile_ns(0.99) as f64 / 1e3,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-line rendering for the STATS verb.
+    pub fn render(&self) -> String {
+        format!(
+            "knn={} classify={} errors={} batches={} batched={} \
+             knn_mean_us={:.1} knn_p50_us={:.1} knn_p99_us={:.1} \
+             classify_mean_us={:.1} classify_p99_us={:.1}",
+            self.knn_requests,
+            self.classify_requests,
+            self.errors,
+            self.batches,
+            self.batched_queries,
+            self.knn_mean_us,
+            self.knn_p50_us,
+            self.knn_p99_us,
+            self.classify_mean_us,
+            self.classify_p99_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_knn(1000);
+        m.record_knn(2000);
+        m.record_classify(500);
+        m.record_error();
+        m.record_batch(16);
+        let s = m.snapshot();
+        assert_eq!(s.knn_requests, 2);
+        assert_eq!(s.classify_requests, 1);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.batched_queries, 16);
+        assert!((s.knn_mean_us - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_all_fields() {
+        let m = Metrics::new();
+        m.record_knn(1_000_000);
+        let text = m.snapshot().render();
+        for field in ["knn=", "classify=", "errors=", "knn_p99_us="] {
+            assert!(text.contains(field), "{text}");
+        }
+    }
+
+    #[test]
+    fn snapshot_is_stable_copy() {
+        let m = Metrics::new();
+        m.record_knn(100);
+        let s1 = m.snapshot();
+        m.record_knn(100);
+        assert_eq!(s1.knn_requests, 1); // unchanged copy
+        assert_eq!(m.snapshot().knn_requests, 2);
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 serving coordinator: the production wrapper around the engines.
+//!
+//! ```text
+//! TCP clients ──► server (line protocol) ──► router ──► engine
+//!                     │                        │
+//!                     └── metrics ◄────────────┘
+//!                     └── batcher (groups same-window PJRT queries)
+//! ```
+//!
+//! Everything is std-only (tokio is not in the offline vendor set):
+//! a thread-pool accept loop, `mpsc`-based batching, and atomic
+//! counters + a mutexed latency histogram for metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use metrics::Metrics;
+pub use protocol::{Request, Response};
+pub use router::Router;
+pub use server::Server;

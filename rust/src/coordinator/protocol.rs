@@ -1,0 +1,228 @@
+//! Wire protocol: newline-delimited text, one request per line.
+//!
+//! Requests:
+//! ```text
+//! KNN <k> <x> <y> [engine]        → OK <id>:<dist>:<label> ...
+//! CLASSIFY <k> <x> <y> [engine]   → OK <label>
+//! STATS                           → OK <metrics text, one line>
+//! PING                            → OK pong
+//! QUIT                            → closes the connection
+//! ```
+//! Errors: `ERR <domain> <message>`.
+
+use crate::engine::Neighbor;
+use crate::error::{AsnnError, Result};
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Knn { k: usize, x: f64, y: f64, engine: Option<String> },
+    Classify { k: usize, x: f64, y: f64, engine: Option<String> },
+    Stats,
+    Ping,
+    Quit,
+}
+
+impl Request {
+    /// Parse one protocol line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let mut it = line.split_whitespace();
+        let verb = it
+            .next()
+            .ok_or_else(|| AsnnError::Protocol("empty request".into()))?
+            .to_ascii_uppercase();
+        let parse_query = |it: &mut dyn Iterator<Item = &str>| -> Result<(usize, f64, f64, Option<String>)> {
+            let k: usize = it
+                .next()
+                .ok_or_else(|| AsnnError::Protocol("missing k".into()))?
+                .parse()
+                .map_err(|_| AsnnError::Protocol("bad k".into()))?;
+            let x: f64 = it
+                .next()
+                .ok_or_else(|| AsnnError::Protocol("missing x".into()))?
+                .parse()
+                .map_err(|_| AsnnError::Protocol("bad x".into()))?;
+            let y: f64 = it
+                .next()
+                .ok_or_else(|| AsnnError::Protocol("missing y".into()))?
+                .parse()
+                .map_err(|_| AsnnError::Protocol("bad y".into()))?;
+            let engine = it.next().map(|s| s.to_string());
+            Ok((k, x, y, engine))
+        };
+        match verb.as_str() {
+            "KNN" => {
+                let (k, x, y, engine) = parse_query(&mut it)?;
+                Ok(Request::Knn { k, x, y, engine })
+            }
+            "CLASSIFY" => {
+                let (k, x, y, engine) = parse_query(&mut it)?;
+                Ok(Request::Classify { k, x, y, engine })
+            }
+            "STATS" => Ok(Request::Stats),
+            "PING" => Ok(Request::Ping),
+            "QUIT" => Ok(Request::Quit),
+            other => Err(AsnnError::Protocol(format!("unknown verb {other:?}"))),
+        }
+    }
+
+    /// Serialize back to a protocol line (client side).
+    pub fn format(&self) -> String {
+        match self {
+            Request::Knn { k, x, y, engine } => match engine {
+                Some(e) => format!("KNN {k} {x} {y} {e}"),
+                None => format!("KNN {k} {x} {y}"),
+            },
+            Request::Classify { k, x, y, engine } => match engine {
+                Some(e) => format!("CLASSIFY {k} {x} {y} {e}"),
+                None => format!("CLASSIFY {k} {x} {y}"),
+            },
+            Request::Stats => "STATS".into(),
+            Request::Ping => "PING".into(),
+            Request::Quit => "QUIT".into(),
+        }
+    }
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Neighbors(Vec<Neighbor>),
+    Label(u16),
+    Text(String),
+    Error { domain: String, message: String },
+}
+
+impl Response {
+    pub fn format(&self) -> String {
+        match self {
+            Response::Neighbors(hits) => {
+                let body: Vec<String> = hits
+                    .iter()
+                    .map(|n| format!("{}:{:.6}:{}", n.id, n.dist, n.label))
+                    .collect();
+                format!("OK {}", body.join(" "))
+            }
+            Response::Label(l) => format!("OK {l}"),
+            Response::Text(t) => format!("OK {}", t.replace('\n', " | ")),
+            Response::Error { domain, message } => {
+                format!("ERR {domain} {}", message.replace('\n', " "))
+            }
+        }
+    }
+
+    /// Parse a response line (client side).
+    pub fn parse(line: &str) -> Result<Response> {
+        if let Some(rest) = line.strip_prefix("ERR ") {
+            let (domain, message) = rest.split_once(' ').unwrap_or((rest, ""));
+            return Ok(Response::Error { domain: domain.into(), message: message.into() });
+        }
+        let Some(rest) = line.strip_prefix("OK") else {
+            return Err(AsnnError::Protocol(format!("bad response line {line:?}")));
+        };
+        let rest = rest.trim_start();
+        // try neighbors form first: id:dist:label triplets
+        if !rest.is_empty() && rest.split_whitespace().all(|t| t.matches(':').count() == 2) {
+            let mut hits = Vec::new();
+            let mut ok = true;
+            for tok in rest.split_whitespace() {
+                let parts: Vec<&str> = tok.split(':').collect();
+                match (
+                    parts[0].parse::<u32>(),
+                    parts[1].parse::<f64>(),
+                    parts[2].parse::<u16>(),
+                ) {
+                    (Ok(id), Ok(dist), Ok(label)) => hits.push(Neighbor { id, dist, label }),
+                    _ => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok && !hits.is_empty() {
+                return Ok(Response::Neighbors(hits));
+            }
+        }
+        if let Ok(label) = rest.parse::<u16>() {
+            return Ok(Response::Label(label));
+        }
+        Ok(Response::Text(rest.to_string()))
+    }
+
+    pub fn from_error(e: &AsnnError) -> Response {
+        Response::Error { domain: e.tag().into(), message: e.to_string() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knn_roundtrip() {
+        let r = Request::parse("KNN 11 0.5 0.25 active").unwrap();
+        assert_eq!(
+            r,
+            Request::Knn { k: 11, x: 0.5, y: 0.25, engine: Some("active".into()) }
+        );
+        assert_eq!(Request::parse(&r.format()).unwrap(), r);
+    }
+
+    #[test]
+    fn classify_without_engine() {
+        let r = Request::parse("classify 5 0.1 0.9").unwrap();
+        assert_eq!(r, Request::Classify { k: 5, x: 0.1, y: 0.9, engine: None });
+    }
+
+    #[test]
+    fn control_verbs() {
+        assert_eq!(Request::parse("PING").unwrap(), Request::Ping);
+        assert_eq!(Request::parse("STATS").unwrap(), Request::Stats);
+        assert_eq!(Request::parse("QUIT").unwrap(), Request::Quit);
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        assert!(Request::parse("").is_err());
+        assert!(Request::parse("KNN").is_err());
+        assert!(Request::parse("KNN x 0.5 0.5").is_err());
+        assert!(Request::parse("FROB 1 2 3").is_err());
+    }
+
+    #[test]
+    fn neighbors_response_roundtrip() {
+        let hits = vec![
+            Neighbor { id: 3, dist: 0.125, label: 1 },
+            Neighbor { id: 9, dist: 0.5, label: 0 },
+        ];
+        let line = Response::Neighbors(hits.clone()).format();
+        match Response::parse(&line).unwrap() {
+            Response::Neighbors(parsed) => {
+                assert_eq!(parsed.len(), 2);
+                assert_eq!(parsed[0].id, 3);
+                assert!((parsed[0].dist - 0.125).abs() < 1e-9);
+                assert_eq!(parsed[1].label, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn label_response_roundtrip() {
+        let line = Response::Label(2).format();
+        assert_eq!(Response::parse(&line).unwrap(), Response::Label(2));
+    }
+
+    #[test]
+    fn error_response_roundtrip() {
+        let e = AsnnError::Query("k too large".into());
+        let line = Response::from_error(&e).format();
+        match Response::parse(&line).unwrap() {
+            Response::Error { domain, message } => {
+                assert_eq!(domain, "query");
+                assert!(message.contains("k too large"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

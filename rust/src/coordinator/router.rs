@@ -1,0 +1,154 @@
+//! Request router: owns the engine set and dispatches each request to
+//! the default engine or a per-request override.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use super::protocol::{Request, Response};
+use crate::engine::NnEngine;
+use crate::error::{AsnnError, Result};
+use crate::util::timer::Timer;
+
+/// Engine registry + dispatch policy.
+pub struct Router {
+    engines: HashMap<String, Arc<dyn NnEngine>>,
+    default_engine: String,
+    metrics: Arc<Metrics>,
+}
+
+impl Router {
+    pub fn new(default_engine: impl Into<String>, metrics: Arc<Metrics>) -> Self {
+        Self { engines: HashMap::new(), default_engine: default_engine.into(), metrics }
+    }
+
+    pub fn register(&mut self, name: impl Into<String>, engine: Arc<dyn NnEngine>) {
+        self.engines.insert(name.into(), engine);
+    }
+
+    pub fn engine_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.engines.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    fn pick(&self, name: Option<&str>) -> Result<&Arc<dyn NnEngine>> {
+        let name = name.unwrap_or(&self.default_engine);
+        self.engines.get(name).ok_or_else(|| {
+            AsnnError::Coordinator(format!(
+                "unknown engine {name:?} (have: {})",
+                self.engine_names().join(", ")
+            ))
+        })
+    }
+
+    /// Handle one request, recording metrics. Never panics; protocol
+    /// and engine failures map to `Response::Error`.
+    pub fn handle(&self, req: &Request) -> Response {
+        match req {
+            Request::Knn { k, x, y, engine } => {
+                let t = Timer::new();
+                match self.pick(engine.as_deref()).and_then(|e| e.knn(&[*x, *y], *k)) {
+                    Ok(hits) => {
+                        self.metrics.record_knn(t.elapsed_ns());
+                        Response::Neighbors(hits)
+                    }
+                    Err(e) => {
+                        self.metrics.record_error();
+                        Response::from_error(&e)
+                    }
+                }
+            }
+            Request::Classify { k, x, y, engine } => {
+                let t = Timer::new();
+                match self.pick(engine.as_deref()).and_then(|e| e.classify(&[*x, *y], *k)) {
+                    Ok(label) => {
+                        self.metrics.record_classify(t.elapsed_ns());
+                        Response::Label(label)
+                    }
+                    Err(e) => {
+                        self.metrics.record_error();
+                        Response::from_error(&e)
+                    }
+                }
+            }
+            Request::Stats => Response::Text(self.metrics.snapshot().render()),
+            Request::Ping => Response::Text("pong".into()),
+            Request::Quit => Response::Text("bye".into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::engine::brute::BruteEngine;
+    use crate::engine::active::{ActiveEngine, ActiveParams};
+
+    fn router() -> Router {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(2000, 91)));
+        let mut r = Router::new("brute", Arc::new(Metrics::new()));
+        r.register("brute", Arc::new(BruteEngine::new(ds.clone())));
+        r.register(
+            "active",
+            Arc::new(ActiveEngine::new(ds, 500, ActiveParams::default()).unwrap()),
+        );
+        r
+    }
+
+    #[test]
+    fn routes_to_default_engine() {
+        let r = router();
+        match r.handle(&Request::Knn { k: 5, x: 0.5, y: 0.5, engine: None }) {
+            Response::Neighbors(hits) => assert_eq!(hits.len(), 5),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(r.metrics().snapshot().knn_requests, 1);
+    }
+
+    #[test]
+    fn routes_to_override_engine() {
+        let r = router();
+        match r.handle(&Request::Knn { k: 5, x: 0.5, y: 0.5, engine: Some("active".into()) }) {
+            Response::Neighbors(hits) => assert!(hits.len() <= 5),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_engine_is_protocol_error() {
+        let r = router();
+        match r.handle(&Request::Knn { k: 5, x: 0.5, y: 0.5, engine: Some("nope".into()) }) {
+            Response::Error { domain, .. } => assert_eq!(domain, "coordinator"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(r.metrics().snapshot().errors, 1);
+    }
+
+    #[test]
+    fn classify_and_stats() {
+        let r = router();
+        match r.handle(&Request::Classify { k: 11, x: 0.3, y: 0.7, engine: None }) {
+            Response::Label(l) => assert!(l < 3),
+            other => panic!("{other:?}"),
+        }
+        match r.handle(&Request::Stats) {
+            Response::Text(t) => assert!(t.contains("classify=1")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn engine_error_propagates_as_response() {
+        let r = router();
+        match r.handle(&Request::Knn { k: 0, x: 0.5, y: 0.5, engine: None }) {
+            Response::Error { domain, .. } => assert_eq!(domain, "query"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

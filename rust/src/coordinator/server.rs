@@ -1,0 +1,252 @@
+//! TCP server: newline-delimited protocol over std::net, connections
+//! handled by the worker pool, graceful shutdown via an atomic flag.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::protocol::{Request, Response};
+use super::router::Router;
+use super::worker::ThreadPool;
+use crate::error::{AsnnError, Result};
+
+/// The serving frontend.
+pub struct Server {
+    router: Arc<Router>,
+    workers: usize,
+}
+
+/// Handle for stopping a running server.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and wait for the accept loop to exit.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // nudge the blocking accept() with a no-op connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Server {
+    pub fn new(router: Arc<Router>, workers: usize) -> Self {
+        Self { router, workers: workers.max(1) }
+    }
+
+    /// Bind and serve in a background thread; returns a stop handle.
+    /// `addr` may use port 0 for an OS-assigned port (tests).
+    pub fn spawn(self, addr: &str) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| AsnnError::Coordinator(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| AsnnError::Coordinator(format!("local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let router = Arc::clone(&self.router);
+        let workers = self.workers;
+        let join = std::thread::Builder::new()
+            .name("asnn-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers);
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let router = Arc::clone(&router);
+                            let stop = Arc::clone(&stop2);
+                            pool.execute(move || {
+                                let _ = handle_connection(stream, &router, &stop);
+                            });
+                        }
+                        Err(_) => continue,
+                    }
+                }
+            })
+            .map_err(|e| AsnnError::Coordinator(format!("spawn accept loop: {e}")))?;
+        Ok(ServerHandle { addr: local, stop, join: Some(join) })
+    }
+}
+
+/// Serve one connection until QUIT/EOF/server-stop. Reads use a short
+/// timeout so idle connections observe the stop flag — otherwise a
+/// worker blocked in `read_line` would deadlock server shutdown while
+/// any client keeps its connection open.
+fn handle_connection(
+    stream: TcpStream,
+    router: &Router,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100))).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // keep any partial line already buffered; just poll stop
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        let msg = std::mem::take(&mut line);
+        if msg.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(msg.trim_end()) {
+            Ok(Request::Quit) => {
+                writeln!(writer, "{}", Response::Text("bye".into()).format())?;
+                writer.flush()?;
+                break;
+            }
+            Ok(req) => router.handle(&req),
+            Err(e) => {
+                router.metrics().record_error();
+                Response::from_error(&e)
+            }
+        };
+        writeln!(writer, "{}", response.format())?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for tests, examples, and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| AsnnError::Coordinator(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .map_err(|e| AsnnError::Coordinator(format!("clone stream: {e}")))?,
+        );
+        Ok(Self { reader, writer: BufWriter::new(stream) })
+    }
+
+    /// Send one request, read one response line.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", req.format())?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(AsnnError::Coordinator("server closed connection".into()));
+        }
+        Response::parse(line.trim_end())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::engine::brute::BruteEngine;
+
+    fn spawn_server() -> ServerHandle {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 101)));
+        let mut router = Router::new("brute", Arc::new(Metrics::new()));
+        router.register("brute", Arc::new(BruteEngine::new(ds)));
+        Server::new(Arc::new(router), 2).spawn("127.0.0.1:0").unwrap()
+    }
+
+    #[test]
+    fn end_to_end_knn() {
+        let handle = spawn_server();
+        let mut client = Client::connect(&handle.addr).unwrap();
+        match client.call(&Request::Knn { k: 7, x: 0.5, y: 0.5, engine: None }).unwrap() {
+            Response::Neighbors(hits) => assert_eq!(hits.len(), 7),
+            other => panic!("{other:?}"),
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn ping_stats_and_errors() {
+        let handle = spawn_server();
+        let mut client = Client::connect(&handle.addr).unwrap();
+        assert_eq!(client.call(&Request::Ping).unwrap(), Response::Text("pong".into()));
+        match client.call(&Request::Knn { k: 0, x: 0.0, y: 0.0, engine: None }).unwrap() {
+            Response::Error { domain, .. } => assert_eq!(domain, "query"),
+            other => panic!("{other:?}"),
+        }
+        match client.call(&Request::Stats).unwrap() {
+            Response::Text(t) => assert!(t.contains("errors=1"), "{t}"),
+            other => panic!("{other:?}"),
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let handle = spawn_server();
+        let addr = handle.addr;
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    for _ in 0..10 {
+                        match c.call(&Request::Knn { k: 3, x: 0.2, y: 0.8, engine: None }) {
+                            Ok(Response::Neighbors(h)) => assert_eq!(h.len(), 3),
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn malformed_line_gets_err_response() {
+        let handle = spawn_server();
+        let stream = TcpStream::connect(handle.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writeln!(writer, "GIBBERISH 1 2").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR protocol"), "{line}");
+        handle.shutdown();
+    }
+}

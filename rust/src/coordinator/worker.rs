@@ -1,0 +1,109 @@
+//! Fixed-size thread pool (std-only) for connection handling.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A basic fixed thread pool; jobs are closures.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("asnn-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), handles }
+    }
+
+    /// Queue a job. Panics if the pool is shut down.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => break, // all senders dropped: shutdown
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = channel();
+        let t0 = std::time::Instant::now();
+        for _ in 0..2 {
+            let tx = tx.clone();
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                tx.send(()).unwrap();
+            });
+        }
+        rx.recv().unwrap();
+        rx.recv().unwrap();
+        // two 50 ms jobs on two threads: well under 100 ms
+        assert!(t0.elapsed().as_millis() < 95, "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn reports_thread_count() {
+        assert_eq!(ThreadPool::new(3).threads(), 3);
+    }
+}

@@ -1,0 +1,174 @@
+//! Dataset I/O: a simple CSV form (`x0,x1,...,label` per line) and a
+//! compact little-endian binary form for large benchmark datasets.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::Dataset;
+use crate::error::{AsnnError, Result};
+
+/// Write CSV: header `# dim=<d> classes=<c>` then one line per point.
+pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "# dim={} classes={}", ds.dim, ds.num_classes)?;
+    for i in 0..ds.len() {
+        let p = ds.point(i);
+        for v in p {
+            write!(w, "{v},")?;
+        }
+        writeln!(w, "{}", ds.label(i))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the CSV form written by [`save_csv`].
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let r = BufReader::new(File::open(path)?);
+    let mut dim = 0usize;
+    let mut classes = 0usize;
+    let mut points = Vec::new();
+    let mut labels = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(hdr) = line.strip_prefix('#') {
+            for tok in hdr.split_whitespace() {
+                if let Some(v) = tok.strip_prefix("dim=") {
+                    dim = v.parse().map_err(|_| bad_line(lineno, "dim"))?;
+                } else if let Some(v) = tok.strip_prefix("classes=") {
+                    classes = v.parse().map_err(|_| bad_line(lineno, "classes"))?;
+                }
+            }
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if dim == 0 {
+            dim = fields.len() - 1;
+        }
+        if fields.len() != dim + 1 {
+            return Err(bad_line(lineno, "field count"));
+        }
+        for f in &fields[..dim] {
+            points.push(f.parse::<f64>().map_err(|_| bad_line(lineno, "coordinate"))?);
+        }
+        labels.push(fields[dim].parse::<u16>().map_err(|_| bad_line(lineno, "label"))?);
+    }
+    if classes == 0 {
+        classes = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(1);
+    }
+    Dataset::new(dim, points, labels, classes)
+}
+
+fn bad_line(lineno: usize, what: &str) -> AsnnError {
+    AsnnError::Data(format!("csv line {}: bad {what}", lineno + 1))
+}
+
+const BIN_MAGIC: &[u8; 8] = b"ASNNDS01";
+
+/// Binary form: magic, dim/classes/n as u64 LE, then f64 points, u16 labels.
+pub fn save_bin(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    for v in [ds.dim as u64, ds.num_classes as u64, ds.len() as u64] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &p in &ds.points {
+        w.write_all(&p.to_le_bytes())?;
+    }
+    for &l in &ds.labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary form written by [`save_bin`].
+pub fn load_bin(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        return Err(AsnnError::Data("bad magic: not an asnn dataset".into()));
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let dim = read_u64(&mut r)? as usize;
+    let classes = read_u64(&mut r)? as usize;
+    let n = read_u64(&mut r)? as usize;
+    let mut points = vec![0f64; n * dim];
+    let mut buf8 = [0u8; 8];
+    for p in points.iter_mut() {
+        r.read_exact(&mut buf8)?;
+        *p = f64::from_le_bytes(buf8);
+    }
+    let mut labels = vec![0u16; n];
+    let mut buf2 = [0u8; 2];
+    for l in labels.iter_mut() {
+        r.read_exact(&mut buf2)?;
+        *l = u16::from_le_bytes(buf2);
+    }
+    Dataset::new(dim, points, labels, classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("asnn-io-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = generate(&SyntheticSpec::paper_default(50, 3));
+        let path = tmp("a.csv");
+        save_csv(&ds, &path).unwrap();
+        let back = load_csv(&path).unwrap();
+        assert_eq!(back.dim, ds.dim);
+        assert_eq!(back.num_classes, ds.num_classes);
+        assert_eq!(back.labels, ds.labels);
+        for (a, b) in back.points.iter().zip(&ds.points) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bin_roundtrip_exact() {
+        let ds = generate(&SyntheticSpec::blobs(64, 3, 5));
+        let path = tmp("b.bin");
+        save_bin(&ds, &path).unwrap();
+        let back = load_bin(&path).unwrap();
+        assert_eq!(back.points, ds.points); // bit-exact
+        assert_eq!(back.labels, ds.labels);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("c.bin");
+        std::fs::write(&path, b"NOTADATASET....").unwrap();
+        assert!(load_bin(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_bad_line_reports_lineno() {
+        let path = tmp("d.csv");
+        std::fs::write(&path, "# dim=2 classes=2\n0.1,0.2,0\n0.3,oops,1\n").unwrap();
+        let err = load_csv(&path).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+}

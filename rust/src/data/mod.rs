@@ -1,0 +1,171 @@
+//! Datasets: point/label storage, synthetic generators, and I/O.
+
+pub mod io;
+pub mod synthetic;
+
+use crate::error::{AsnnError, Result};
+
+/// A labeled point set in `dim`-dimensional space, stored row-major
+/// (`points[i*dim .. (i+1)*dim]` is point `i`).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub dim: usize,
+    pub points: Vec<f64>,
+    pub labels: Vec<u16>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    /// Build from flat storage, validating shape invariants.
+    pub fn new(dim: usize, points: Vec<f64>, labels: Vec<u16>, num_classes: usize) -> Result<Self> {
+        if dim == 0 {
+            return Err(AsnnError::Data("dim must be > 0".into()));
+        }
+        if points.len() % dim != 0 {
+            return Err(AsnnError::Data(format!(
+                "points length {} not divisible by dim {}",
+                points.len(),
+                dim
+            )));
+        }
+        let n = points.len() / dim;
+        if labels.len() != n {
+            return Err(AsnnError::Data(format!(
+                "labels length {} != point count {n}",
+                labels.len()
+            )));
+        }
+        if let Some(&bad) = labels.iter().find(|&&l| l as usize >= num_classes) {
+            return Err(AsnnError::Data(format!(
+                "label {bad} out of range for {num_classes} classes"
+            )));
+        }
+        Ok(Self { dim, points, labels, num_classes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Point `i` as a slice.
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.points[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> u16 {
+        self.labels[i]
+    }
+
+    /// Axis-aligned bounding box: (mins, maxs) per dimension.
+    pub fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        let mut mins = vec![f64::INFINITY; self.dim];
+        let mut maxs = vec![f64::NEG_INFINITY; self.dim];
+        for i in 0..self.len() {
+            let p = self.point(i);
+            for d in 0..self.dim {
+                mins[d] = mins[d].min(p[d]);
+                maxs[d] = maxs[d].max(p[d]);
+            }
+        }
+        (mins, maxs)
+    }
+
+    /// Squared Euclidean distance between point `i` and query `q`.
+    #[inline]
+    pub fn dist2(&self, i: usize, q: &[f64]) -> f64 {
+        let p = self.point(i);
+        let mut s = 0.0;
+        for d in 0..self.dim {
+            let diff = p[d] - q[d];
+            s += diff * diff;
+        }
+        s
+    }
+
+    /// L1 (Manhattan) distance between point `i` and query `q`.
+    #[inline]
+    pub fn dist_l1(&self, i: usize, q: &[f64]) -> f64 {
+        let p = self.point(i);
+        let mut s = 0.0;
+        for d in 0..self.dim {
+            s += (p[d] - q[d]).abs();
+        }
+        s
+    }
+
+    /// Split off the last `n_holdout` points as a query/holdout set.
+    pub fn split_holdout(mut self, n_holdout: usize) -> Result<(Dataset, Dataset)> {
+        let n = self.len();
+        if n_holdout >= n {
+            return Err(AsnnError::Data(format!(
+                "holdout {n_holdout} >= dataset size {n}"
+            )));
+        }
+        let keep = n - n_holdout;
+        let hold_pts = self.points.split_off(keep * self.dim);
+        let hold_lbl = self.labels.split_off(keep);
+        let train = Dataset::new(self.dim, self.points, self.labels, self.num_classes)?;
+        let hold = Dataset::new(self.dim, hold_pts, hold_lbl, self.num_classes)?;
+        Ok((train, hold))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            2,
+            vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0],
+            vec![0, 1, 2],
+            3,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Dataset::new(0, vec![], vec![], 1).is_err());
+        assert!(Dataset::new(2, vec![1.0], vec![0], 1).is_err());
+        assert!(Dataset::new(2, vec![1.0, 2.0], vec![], 1).is_err());
+        assert!(Dataset::new(2, vec![1.0, 2.0], vec![5], 3).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let d = tiny();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.point(1), &[1.0, 0.0]);
+        assert_eq!(d.label(2), 2);
+    }
+
+    #[test]
+    fn bounds_cover_all_points() {
+        let (mins, maxs) = tiny().bounds();
+        assert_eq!(mins, vec![0.0, 0.0]);
+        assert_eq!(maxs, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn distances() {
+        let d = tiny();
+        assert_eq!(d.dist2(0, &[3.0, 4.0]), 25.0);
+        assert_eq!(d.dist_l1(0, &[3.0, 4.0]), 7.0);
+    }
+
+    #[test]
+    fn holdout_split() {
+        let (train, hold) = tiny().split_holdout(1).unwrap();
+        assert_eq!(train.len(), 2);
+        assert_eq!(hold.len(), 1);
+        assert_eq!(hold.point(0), &[0.0, 2.0]);
+        assert!(tiny().split_holdout(3).is_err());
+    }
+}

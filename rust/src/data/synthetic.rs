@@ -1,0 +1,216 @@
+//! Synthetic workload generators.
+//!
+//! The paper evaluates on "randomly generated 2 dimensional data points"
+//! with 3 classes ([§3]). We provide that workload
+//! ([`SyntheticSpec::paper_default`]) plus Gaussian-mixture blobs (used
+//! for the Fig. 2-style illustrations, where classes are spatially
+//! clustered) and rings (a worst case for LSH).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Distribution family for generated points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// i.i.d. uniform in the unit hypercube; labels uniform at random —
+    /// the paper's "no class structure" worst case.
+    Uniform,
+    /// One isotropic Gaussian blob per class, centers on a circle.
+    Blobs,
+    /// Concentric rings, one per class (hard for hash/tree baselines).
+    Rings,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Option<Family> {
+        match s {
+            "uniform" => Some(Family::Uniform),
+            "blobs" => Some(Family::Blobs),
+            "rings" => Some(Family::Rings),
+            _ => None,
+        }
+    }
+}
+
+/// Full generator specification.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub family: Family,
+    pub n: usize,
+    pub dim: usize,
+    pub num_classes: usize,
+    pub seed: u64,
+    /// Blob standard deviation (fraction of unit box).
+    pub blob_std: f64,
+}
+
+impl SyntheticSpec {
+    /// The paper's §3 workload: uniform 2-D, 3 classes.
+    pub fn paper_default(n: usize, seed: u64) -> Self {
+        Self { family: Family::Uniform, n, dim: 2, num_classes: 3, seed, blob_std: 0.06 }
+    }
+
+    pub fn blobs(n: usize, num_classes: usize, seed: u64) -> Self {
+        Self { family: Family::Blobs, n, dim: 2, num_classes, seed, blob_std: 0.06 }
+    }
+
+    pub fn rings(n: usize, num_classes: usize, seed: u64) -> Self {
+        Self { family: Family::Rings, n, dim: 2, num_classes, seed, blob_std: 0.02 }
+    }
+}
+
+/// Generate a dataset from a spec. Points land in the unit hypercube
+/// `[0,1]^dim` (clamped for blob/ring tails) so grid bounds are stable.
+pub fn generate(spec: &SyntheticSpec) -> Dataset {
+    let mut rng = Rng::new(spec.seed);
+    let mut points = Vec::with_capacity(spec.n * spec.dim);
+    let mut labels = Vec::with_capacity(spec.n);
+    match spec.family {
+        Family::Uniform => {
+            for _ in 0..spec.n {
+                for _ in 0..spec.dim {
+                    points.push(rng.next_f64());
+                }
+                labels.push(rng.below(spec.num_classes as u64) as u16);
+            }
+        }
+        Family::Blobs => {
+            // class centers evenly spaced on a circle of radius 0.3
+            let centers: Vec<Vec<f64>> = (0..spec.num_classes)
+                .map(|c| {
+                    let ang = c as f64 / spec.num_classes as f64 * std::f64::consts::TAU;
+                    let mut ctr = vec![0.5; spec.dim];
+                    ctr[0] = 0.5 + 0.3 * ang.cos();
+                    if spec.dim > 1 {
+                        ctr[1] = 0.5 + 0.3 * ang.sin();
+                    }
+                    ctr
+                })
+                .collect();
+            for _ in 0..spec.n {
+                let c = rng.below(spec.num_classes as u64) as usize;
+                for d in 0..spec.dim {
+                    let x = rng.normal_with(centers[c][d], spec.blob_std);
+                    points.push(x.clamp(0.0, 1.0));
+                }
+                labels.push(c as u16);
+            }
+        }
+        Family::Rings => {
+            for _ in 0..spec.n {
+                let c = rng.below(spec.num_classes as u64) as usize;
+                let radius = 0.12 + 0.33 * (c as f64 + 0.5) / spec.num_classes as f64;
+                let ang = rng.uniform(0.0, std::f64::consts::TAU);
+                let noise = rng.normal_with(0.0, spec.blob_std);
+                let r = radius + noise;
+                let mut p = vec![0.5; spec.dim];
+                p[0] = (0.5 + r * ang.cos()).clamp(0.0, 1.0);
+                if spec.dim > 1 {
+                    p[1] = (0.5 + r * ang.sin()).clamp(0.0, 1.0);
+                }
+                points.extend_from_slice(&p);
+                labels.push(c as u16);
+            }
+        }
+    }
+    Dataset::new(spec.dim, points, labels, spec.num_classes).expect("generator invariant")
+}
+
+/// Generate `n` query points matching the spec's support (uniform in the
+/// unit box for all families — the paper classifies 100 fresh points).
+pub fn generate_queries(n: usize, dim: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed ^ 0xA5A5_A5A5_A5A5_A5A5);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_f64()).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shape_and_range() {
+        let ds = generate(&SyntheticSpec::paper_default(1000, 1));
+        assert_eq!(ds.len(), 1000);
+        assert_eq!(ds.dim, 2);
+        assert_eq!(ds.num_classes, 3);
+        assert!(ds.points.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn uniform_label_balance() {
+        let ds = generate(&SyntheticSpec::paper_default(30_000, 2));
+        let mut counts = [0usize; 3];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / 30_000.0;
+            assert!((frac - 1.0 / 3.0).abs() < 0.02, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&SyntheticSpec::paper_default(100, 9));
+        let b = generate(&SyntheticSpec::paper_default(100, 9));
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(&SyntheticSpec::paper_default(100, 10));
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn blobs_cluster_near_centers() {
+        let ds = generate(&SyntheticSpec::blobs(3000, 3, 4));
+        // each class's mean point should be far from the global center
+        for class in 0..3u16 {
+            let (mut mx, mut my, mut n) = (0.0, 0.0, 0);
+            for i in 0..ds.len() {
+                if ds.label(i) == class {
+                    mx += ds.point(i)[0];
+                    my += ds.point(i)[1];
+                    n += 1;
+                }
+            }
+            let (mx, my) = (mx / n as f64, my / n as f64);
+            let dist = ((mx - 0.5).powi(2) + (my - 0.5).powi(2)).sqrt();
+            assert!((dist - 0.3).abs() < 0.05, "class {class} center dist {dist}");
+        }
+    }
+
+    #[test]
+    fn rings_have_distinct_radii() {
+        let ds = generate(&SyntheticSpec::rings(3000, 3, 8));
+        let mut mean_r = [0.0f64; 3];
+        let mut counts = [0usize; 3];
+        for i in 0..ds.len() {
+            let p = ds.point(i);
+            let r = ((p[0] - 0.5).powi(2) + (p[1] - 0.5).powi(2)).sqrt();
+            mean_r[ds.label(i) as usize] += r;
+            counts[ds.label(i) as usize] += 1;
+        }
+        for c in 0..3 {
+            mean_r[c] /= counts[c] as f64;
+        }
+        assert!(mean_r[0] < mean_r[1] && mean_r[1] < mean_r[2], "{mean_r:?}");
+    }
+
+    #[test]
+    fn queries_deterministic() {
+        let a = generate_queries(10, 2, 1);
+        let b = generate_queries(10, 2, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        assert_eq!(a[0].len(), 2);
+    }
+
+    #[test]
+    fn family_parse() {
+        assert_eq!(Family::parse("uniform"), Some(Family::Uniform));
+        assert_eq!(Family::parse("blobs"), Some(Family::Blobs));
+        assert_eq!(Family::parse("rings"), Some(Family::Rings));
+        assert_eq!(Family::parse("nope"), None);
+    }
+}

@@ -1,0 +1,408 @@
+//! The paper's active-search engine (pure rust reference path).
+//!
+//! Algorithm (paper §2): map the query onto the count image, scan the
+//! pixels inside a circle of radius `r` around it, and update `r` by
+//! Eq. 1 until the circle holds exactly `k` points; those points are
+//! the answer. Per-class count images provide classification votes.
+//!
+//! Production extensions (all off by default or faithful to the paper):
+//! tolerance/oscillation handling ([`crate::active::radius`]),
+//! `refined` mode (exact re-rank of the final circle via the grid's
+//! point buckets), and a density-informed r₀ policy (ABL-R0).
+
+use std::sync::Arc;
+
+use super::{Neighbor, NnEngine, QueryStats};
+use crate::active::radius::{RadiusPolicy, Step};
+use crate::active::scan;
+use crate::active::{SearchStep, SearchTrace};
+use crate::config::{Metric, R0Policy, SearchMode};
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+use crate::grid::{MultiGrid, Pyramid};
+
+/// Tuning for the active engine. Defaults are the paper's §3 setup.
+#[derive(Debug, Clone)]
+pub struct ActiveParams {
+    pub r0: u32,
+    pub max_iters: u32,
+    pub metric: Metric,
+    pub mode: SearchMode,
+    pub r0_policy: R0Policy,
+    pub tolerance: u32,
+}
+
+impl Default for ActiveParams {
+    fn default() -> Self {
+        Self {
+            r0: 100,
+            max_iters: 64,
+            metric: Metric::L2,
+            mode: SearchMode::Approx,
+            r0_policy: R0Policy::Fixed,
+            tolerance: 0,
+        }
+    }
+}
+
+/// Result of the radius-adaptation loop: the final circle.
+#[derive(Debug, Clone)]
+pub struct FinalCircle {
+    pub cx: u32,
+    pub cy: u32,
+    pub r: u32,
+    pub n_inside: u64,
+    pub trace: SearchTrace,
+}
+
+/// The paper's engine over a [`MultiGrid`] index.
+pub struct ActiveEngine {
+    grid: MultiGrid,
+    data: Option<Arc<Dataset>>,
+    pyramid: Option<Pyramid>,
+    params: ActiveParams,
+}
+
+impl ActiveEngine {
+    /// Build the index from a dataset (keeps the dataset for labels and
+    /// `refined`-mode exact distances).
+    pub fn new(data: Arc<Dataset>, resolution: usize, params: ActiveParams) -> Result<Self> {
+        let grid = MultiGrid::build(&data, resolution)?;
+        Ok(Self::assemble(grid, Some(data), params))
+    }
+
+    /// Build from an existing grid; `refined` mode and true labels are
+    /// unavailable without the dataset (neighbors carry label 0).
+    pub fn from_grid(grid: MultiGrid, params: ActiveParams) -> Self {
+        Self::assemble(grid, None, params)
+    }
+
+    fn assemble(grid: MultiGrid, data: Option<Arc<Dataset>>, params: ActiveParams) -> Self {
+        let pyramid = if params.r0_policy == R0Policy::Density {
+            Some(Pyramid::build(&grid))
+        } else {
+            None
+        };
+        Self { grid, data, pyramid, params }
+    }
+
+    pub fn grid(&self) -> &MultiGrid {
+        &self.grid
+    }
+
+    pub fn params(&self) -> &ActiveParams {
+        &self.params
+    }
+
+    /// The backing dataset, when the engine was built with one.
+    pub fn dataset(&self) -> &Option<Arc<Dataset>> {
+        &self.data
+    }
+
+    /// Image-diagonal radius cap (covers the whole image from anywhere).
+    fn r_max(&self) -> u32 {
+        let r = self.grid.resolution() as f64;
+        (r * std::f64::consts::SQRT_2).ceil() as u32
+    }
+
+    fn initial_radius(&self, px: u32, py: u32, k: usize) -> u32 {
+        match self.params.r0_policy {
+            R0Policy::Fixed => self.params.r0,
+            R0Policy::Density => self
+                .pyramid
+                .as_ref()
+                .map(|p| p.suggest_r0(k, px, py))
+                .unwrap_or(self.params.r0),
+        }
+    }
+
+    /// Run the radius-adaptation loop for a query point; the core of
+    /// the paper's algorithm. Public for Fig. 2 traces and the PJRT
+    /// engine (which shares this loop, swapping the count primitive).
+    pub fn search(&self, q: &[f64], k: usize) -> Result<FinalCircle> {
+        self.search_with(q, k, |cx, cy, r| {
+            scan::count_in_disk(&self.grid, cx, cy, r, self.params.metric)
+        })
+    }
+
+    /// [`search`](Self::search) with a caller-provided count primitive
+    /// (`|cx, cy, r| -> points inside`).
+    pub fn search_with(
+        &self,
+        q: &[f64],
+        k: usize,
+        mut count: impl FnMut(u32, u32, u32) -> u64,
+    ) -> Result<FinalCircle> {
+        self.check(q, k)?;
+        let geom = self.grid.geometry();
+        let (cx, cy) = geom.pixel_of(q[0], q[1]);
+        let mut r = self.initial_radius(cx, cy, k).max(1);
+        let mut policy =
+            RadiusPolicy::new(k, self.params.tolerance, self.params.max_iters, self.r_max());
+        let mut trace = SearchTrace::default();
+        loop {
+            let n = count(cx, cy, r);
+            trace.steps.push(SearchStep { r, n });
+            match policy.step(r, n) {
+                Step::Done => {
+                    trace.converged = true;
+                    return Ok(FinalCircle { cx, cy, r, n_inside: n, trace });
+                }
+                Step::Settle(rs) => {
+                    // settle on the ≥k bracket side; recount if it is
+                    // not the circle we just measured
+                    let n_final = if rs == r { n } else { count(cx, cy, rs) };
+                    trace.converged = true;
+                    if rs != r {
+                        trace.steps.push(SearchStep { r: rs, n: n_final });
+                    }
+                    return Ok(FinalCircle { cx, cy, r: rs, n_inside: n_final, trace });
+                }
+                Step::Continue(next) => r = next,
+                Step::Exhausted => {
+                    trace.converged = false;
+                    return Ok(FinalCircle { cx, cy, r, n_inside: n, trace });
+                }
+            }
+        }
+    }
+
+    fn label_of(&self, pid: u32) -> u16 {
+        self.data.as_ref().map(|d| d.label(pid as usize)).unwrap_or(0)
+    }
+
+    fn check(&self, q: &[f64], k: usize) -> Result<()> {
+        if q.len() != 2 {
+            return Err(AsnnError::Query(format!(
+                "active engine requires 2-D queries (got dim {})",
+                q.len()
+            )));
+        }
+        if k == 0 || k > self.grid.n_points() {
+            return Err(AsnnError::Query(format!(
+                "k = {k} out of range for {} points",
+                self.grid.n_points()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl NnEngine for ActiveEngine {
+    fn name(&self) -> &'static str {
+        "active"
+    }
+
+    fn len(&self) -> usize {
+        self.grid.n_points()
+    }
+
+    fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>> {
+        Ok(self.knn_stats(q, k)?.0)
+    }
+
+    fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        let circle = self.search(q, k)?;
+        let cands =
+            scan::collect_in_disk(&self.grid, circle.cx, circle.cy, circle.r, self.params.metric);
+        let px_len = self.grid.geometry().pixel_size()[0];
+        let mut out: Vec<Neighbor> = match self.params.mode {
+            SearchMode::Approx => cands
+                .into_iter()
+                .map(|c| {
+                    let dist = match self.params.metric {
+                        Metric::L2 => c.pixel_dist.sqrt() * px_len,
+                        Metric::L1 => c.pixel_dist * px_len,
+                    };
+                    Neighbor { id: c.point_id, dist, label: self.label_of(c.point_id) }
+                })
+                .collect(),
+            SearchMode::Refined => {
+                let data = self.data.as_ref().ok_or_else(|| {
+                    AsnnError::Query(
+                        "refined mode requires the dataset (build with ActiveEngine::new)".into(),
+                    )
+                })?;
+                cands
+                    .into_iter()
+                    .map(|c| {
+                        let id = c.point_id as usize;
+                        Neighbor { id: c.point_id, dist: data.dist2(id, q).sqrt(), label: data.label(id) }
+                    })
+                    .collect()
+            }
+        };
+        out.sort_by(|a, b| {
+            a.dist
+                .partial_cmp(&b.dist)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        out.truncate(k);
+        let work: u64 = circle
+            .trace
+            .steps
+            .iter()
+            .map(|s| scan::disk_pixels(s.r, self.params.metric))
+            .sum();
+        let stats = QueryStats {
+            work,
+            iterations: circle.trace.iterations() as u32,
+            converged: circle.trace.converged,
+        };
+        Ok((out, stats))
+    }
+
+    /// The paper's classification: per-class counts inside the final
+    /// circle (one count image per class), argmax vote.
+    fn classify(&self, q: &[f64], k: usize) -> Result<u16> {
+        let circle = self.search(q, k)?;
+        let mut counts = vec![0u64; self.grid.num_classes()];
+        scan::class_counts_in_disk(
+            &self.grid,
+            circle.cx,
+            circle.cy,
+            circle.r,
+            self.params.metric,
+            &mut counts,
+        );
+        let best = counts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(c, _)| c as u16)
+            .unwrap_or(0);
+        Ok(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, generate_queries, SyntheticSpec};
+    use crate::engine::brute::BruteEngine;
+
+    fn engine(n: usize, res: usize, params: ActiveParams) -> ActiveEngine {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(n, 55)));
+        ActiveEngine::new(ds, res, params).unwrap()
+    }
+
+    #[test]
+    fn returns_k_neighbors_when_converged() {
+        let e = engine(20_000, 1000, ActiveParams::default());
+        for q in generate_queries(10, 2, 56) {
+            let (hits, st) = e.knn_stats(&q, 11).unwrap();
+            if st.converged {
+                assert!(hits.len() >= 11 || hits.len() == 11, "{}", hits.len());
+            }
+            assert!(hits.len() <= 11);
+            for w in hits.windows(2) {
+                assert!(w[0].dist <= w[1].dist);
+            }
+        }
+    }
+
+    #[test]
+    fn refined_mode_matches_brute_when_circle_large_enough() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(20_000, 57)));
+        let e = ActiveEngine::new(
+            ds.clone(),
+            2000,
+            ActiveParams { mode: SearchMode::Refined, tolerance: 2, ..Default::default() },
+        )
+        .unwrap();
+        let brute = BruteEngine::new(ds);
+        let mut agree = 0;
+        let queries = generate_queries(20, 2, 58);
+        for q in &queries {
+            let a = e.knn(q, 11).unwrap();
+            let t = brute.knn(q, 11).unwrap();
+            let ta: Vec<u32> = t.iter().map(|n| n.id).collect();
+            let overlap = a.iter().filter(|n| ta.contains(&n.id)).count();
+            if overlap >= 9 {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 15, "only {agree}/20 queries had >=9/11 overlap");
+    }
+
+    #[test]
+    fn classify_close_to_ground_truth() {
+        // the paper's experiment: uniform 3-class data, agreement with
+        // exact kNN "up to 98%" — require a decent floor at small scale
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(30_000, 59)));
+        let e = ActiveEngine::new(ds.clone(), 3000, ActiveParams::default()).unwrap();
+        let brute = BruteEngine::new(ds);
+        let queries = generate_queries(50, 2, 60);
+        let mut agree = 0;
+        for q in &queries {
+            if e.classify(q, 11).unwrap() == brute.classify(q, 11).unwrap() {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 35, "agreement {agree}/50");
+    }
+
+    #[test]
+    fn trace_records_radius_path() {
+        let e = engine(5000, 500, ActiveParams::default());
+        let c = e.search(&[0.5, 0.5], 11).unwrap();
+        assert!(!c.trace.steps.is_empty());
+        assert_eq!(c.trace.steps.last().unwrap().r, c.r);
+        assert!(c.trace.converged);
+    }
+
+    #[test]
+    fn l1_metric_works() {
+        let e = engine(10_000, 1000, ActiveParams { metric: Metric::L1, ..Default::default() });
+        let hits = e.knn(&[0.4, 0.6], 11).unwrap();
+        assert!(hits.len() <= 11 && !hits.is_empty());
+    }
+
+    #[test]
+    fn density_r0_converges_faster_on_sparse_data() {
+        // the paper observed fixed r0=100 wastes iterations when data is
+        // sparse; the density policy should start closer to the answer
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 61)));
+        let fixed = ActiveEngine::new(ds.clone(), 3000, ActiveParams::default()).unwrap();
+        let dens = ActiveEngine::new(
+            ds,
+            3000,
+            ActiveParams { r0_policy: R0Policy::Density, ..Default::default() },
+        )
+        .unwrap();
+        let queries = generate_queries(10, 2, 62);
+        let (mut itf, mut itd) = (0u32, 0u32);
+        for q in &queries {
+            itf += fixed.search(q, 11).unwrap().trace.iterations() as u32;
+            itd += dens.search(q, 11).unwrap().trace.iterations() as u32;
+        }
+        assert!(itd <= itf, "density {itd} vs fixed {itf}");
+    }
+
+    #[test]
+    fn refined_without_dataset_errors() {
+        let ds = generate(&SyntheticSpec::paper_default(1000, 63));
+        let grid = MultiGrid::build(&ds, 500).unwrap();
+        let e = ActiveEngine::from_grid(
+            grid,
+            ActiveParams { mode: SearchMode::Refined, ..Default::default() },
+        );
+        assert!(e.knn(&[0.5, 0.5], 5).is_err());
+    }
+
+    #[test]
+    fn validates_inputs() {
+        let e = engine(100, 100, ActiveParams::default());
+        assert!(e.knn(&[0.5], 5).is_err());
+        assert!(e.knn(&[0.5, 0.5], 0).is_err());
+        assert!(e.knn(&[0.5, 0.5], 101).is_err());
+    }
+
+    #[test]
+    fn query_outside_bounds_still_answers() {
+        let e = engine(5000, 500, ActiveParams::default());
+        let hits = e.knn(&[3.0, -2.0], 5).unwrap(); // clamps to border
+        assert!(!hits.is_empty());
+    }
+}

@@ -1,0 +1,215 @@
+//! 3-D active search — the paper's higher-dimension sketch as a
+//! working engine over [`VolumeGrid`], with the d = 3 generalization
+//! of Eq. 1 (`r ← round(r·(k/n)^(1/3))`, since n ∝ ball volume ∝ r³).
+
+use std::sync::Arc;
+
+use super::{majority_vote, Neighbor, NnEngine, QueryStats};
+use crate::active::radius::{RadiusPolicy, Step};
+use crate::active::{SearchStep, SearchTrace};
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+use crate::grid::volume::VolumeGrid;
+
+/// Tuning for the 3-D engine.
+#[derive(Debug, Clone)]
+pub struct Active3dParams {
+    pub r0: u32,
+    pub max_iters: u32,
+    pub tolerance: u32,
+}
+
+impl Default for Active3dParams {
+    fn default() -> Self {
+        Self { r0: 8, max_iters: 64, tolerance: 0 }
+    }
+}
+
+/// Active search over a voxel volume.
+pub struct Active3dEngine {
+    volume: VolumeGrid,
+    data: Arc<Dataset>,
+    params: Active3dParams,
+}
+
+impl Active3dEngine {
+    pub fn new(data: Arc<Dataset>, resolution: usize, params: Active3dParams) -> Result<Self> {
+        let volume = VolumeGrid::build(&data, resolution)?;
+        Ok(Self { volume, data, params })
+    }
+
+    pub fn volume(&self) -> &VolumeGrid {
+        &self.volume
+    }
+
+    /// The radius loop, d = 3 flavor.
+    pub fn search(&self, q: &[f64], k: usize) -> Result<(u32, u32, u32, u32, SearchTrace)> {
+        if q.len() != 3 {
+            return Err(AsnnError::Query(format!(
+                "3-D engine requires 3-D queries (got dim {})",
+                q.len()
+            )));
+        }
+        if k == 0 || k > self.volume.n_points() {
+            return Err(AsnnError::Query(format!(
+                "k = {k} out of range for {} points",
+                self.volume.n_points()
+            )));
+        }
+        let (cx, cy, cz) = self.volume.voxel_of(q);
+        let r_max =
+            (self.volume.resolution() as f64 * 3f64.sqrt()).ceil() as u32;
+        let mut policy = RadiusPolicy::with_exponent(
+            k,
+            self.params.tolerance,
+            self.params.max_iters,
+            r_max,
+            3.0,
+        );
+        let mut r = self.params.r0.max(1);
+        let mut trace = SearchTrace::default();
+        loop {
+            let n = self.volume.count_in_ball(cx, cy, cz, r);
+            trace.steps.push(SearchStep { r, n });
+            match policy.step(r, n) {
+                Step::Done => {
+                    trace.converged = true;
+                    return Ok((cx, cy, cz, r, trace));
+                }
+                Step::Settle(rs) => {
+                    trace.converged = true;
+                    if rs != r {
+                        let n2 = self.volume.count_in_ball(cx, cy, cz, rs);
+                        trace.steps.push(SearchStep { r: rs, n: n2 });
+                    }
+                    return Ok((cx, cy, cz, rs, trace));
+                }
+                Step::Continue(next) => r = next,
+                Step::Exhausted => {
+                    trace.converged = false;
+                    return Ok((cx, cy, cz, r, trace));
+                }
+            }
+        }
+    }
+}
+
+impl NnEngine for Active3dEngine {
+    fn name(&self) -> &'static str {
+        "active-3d"
+    }
+
+    fn len(&self) -> usize {
+        self.volume.n_points()
+    }
+
+    fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>> {
+        Ok(self.knn_stats(q, k)?.0)
+    }
+
+    fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        let (cx, cy, cz, r, trace) = self.search(q, k)?;
+        let cands = self.volume.collect_in_ball(cx, cy, cz, r);
+        // refine by true distance (the volume keeps labels, the dataset
+        // gives exact coordinates)
+        let mut out: Vec<Neighbor> = cands
+            .into_iter()
+            .map(|(pid, label)| Neighbor {
+                id: pid,
+                dist: self.data.dist2(pid as usize, q).sqrt(),
+                label,
+            })
+            .collect();
+        out.sort_by(|a, b| {
+            a.dist
+                .partial_cmp(&b.dist)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        out.truncate(k);
+        let stats = QueryStats {
+            work: trace.steps.iter().map(|s| (s.r as u64).pow(2) * 4).sum(),
+            iterations: trace.iterations() as u32,
+            converged: trace.converged,
+        };
+        Ok((out, stats))
+    }
+
+    fn classify(&self, q: &[f64], k: usize) -> Result<u16> {
+        let (cx, cy, cz, r, _) = self.search(q, k)?;
+        let cands = self.volume.collect_in_ball(cx, cy, cz, r);
+        Ok(majority_vote(cands.into_iter().map(|(_, l)| l)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, generate_queries, SyntheticSpec};
+    use crate::engine::brute::BruteEngine;
+
+    fn engine(n: usize, res: usize, seed: u64) -> (Active3dEngine, BruteEngine) {
+        let mut spec = SyntheticSpec::paper_default(n, seed);
+        spec.dim = 3;
+        let ds = Arc::new(generate(&spec));
+        (
+            Active3dEngine::new(ds.clone(), res, Active3dParams::default()).unwrap(),
+            BruteEngine::new(ds),
+        )
+    }
+
+    #[test]
+    fn returns_k_sorted_neighbors() {
+        let (e, _) = engine(20_000, 64, 41);
+        for q in generate_queries(5, 3, 42) {
+            let hits = e.knn(&q, 11).unwrap();
+            assert!(hits.len() <= 11);
+            for w in hits.windows(2) {
+                assert!(w[0].dist <= w[1].dist);
+            }
+        }
+    }
+
+    #[test]
+    fn decent_recall_vs_brute_in_3d() {
+        let (e, brute) = engine(30_000, 128, 43);
+        let queries = generate_queries(15, 3, 44);
+        let mut recall = 0.0;
+        for q in &queries {
+            let a = e.knn(q, 11).unwrap();
+            let t = brute.knn(q, 11).unwrap();
+            let ids: Vec<u32> = t.iter().map(|n| n.id).collect();
+            recall += a.iter().filter(|h| ids.contains(&h.id)).count() as f64 / 11.0;
+        }
+        let avg = recall / queries.len() as f64;
+        assert!(avg > 0.6, "3-D recall {avg}");
+    }
+
+    #[test]
+    fn classify_runs_and_is_bounded() {
+        let (e, _) = engine(5000, 48, 45);
+        let l = e.classify(&[0.5, 0.5, 0.5], 11).unwrap();
+        assert!(l < 3);
+    }
+
+    #[test]
+    fn validates_dim() {
+        let (e, _) = engine(1000, 32, 46);
+        assert!(e.knn(&[0.5, 0.5], 5).is_err());
+        assert!(e.knn(&[0.5, 0.5, 0.5], 0).is_err());
+    }
+
+    #[test]
+    fn cubic_eq1_converges_faster_than_quadratic_in_3d() {
+        // with n ∝ r³, the d=2 update overshoots; the d=3 policy should
+        // converge in fewer iterations on average
+        let (e, _) = engine(30_000, 96, 47);
+        let queries = generate_queries(10, 3, 48);
+        let mut iters = 0u64;
+        for q in &queries {
+            let (_, _, _, _, trace) = e.search(q, 11).unwrap();
+            iters += trace.iterations() as u64;
+        }
+        assert!(iters as f64 / queries.len() as f64 <= 12.0, "iters {iters}");
+    }
+}

@@ -1,0 +1,444 @@
+//! Active search with the pixel-scan hot spot executed by AOT-compiled
+//! XLA artifacts (L1 Pallas `disk_count` / `neighbor_scan` kernels,
+//! lowered through the L2 jax model, run via PJRT).
+//!
+//! The control loop (Eq. 1, bracketing, termination) stays in rust; the
+//! per-iteration circle count and the final candidate extraction run as
+//! compiled executables on the runtime service thread. Window sizes are
+//! static per artifact, so the engine picks the smallest compiled "zoom
+//! level" that contains the current circle and falls back to the native
+//! scan when the circle outgrows the ladder.
+
+use std::sync::Arc;
+
+use super::active::{ActiveEngine, ActiveParams, FinalCircle};
+use super::{Neighbor, NnEngine, QueryStats};
+use crate::active::scan;
+use crate::active::window::WindowLadder;
+use crate::config::{Metric, SearchMode};
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+use crate::runtime::RuntimeService;
+
+/// PJRT-accelerated active-search engine.
+pub struct ActivePjrtEngine {
+    inner: ActiveEngine,
+    service: RuntimeService,
+    ladder: WindowLadder,
+}
+
+impl ActivePjrtEngine {
+    /// Build over a dataset; the runtime service must expose
+    /// `disk_count_w*_b1` artifacts whose class count matches.
+    pub fn new(
+        data: Arc<Dataset>,
+        resolution: usize,
+        params: ActiveParams,
+        service: RuntimeService,
+    ) -> Result<Self> {
+        let windows = service.disk_count_windows();
+        if windows.is_empty() {
+            return Err(AsnnError::Runtime(
+                "no batch-1 disk_count artifacts (run `make artifacts`)".into(),
+            ));
+        }
+        for &w in &windows {
+            let name = format!("disk_count_w{w}_b1");
+            let meta = service
+                .meta(&name)
+                .ok_or_else(|| AsnnError::Runtime(format!("missing artifact {name}")))?;
+            if meta.classes != data.num_classes {
+                return Err(AsnnError::Runtime(format!(
+                    "artifact {} compiled for {} classes, dataset has {}",
+                    meta.name, meta.classes, data.num_classes
+                )));
+            }
+        }
+        let inner = ActiveEngine::new(data, resolution, params)?;
+        let ladder = WindowLadder::new(windows);
+        Ok(Self { inner, service, ladder })
+    }
+
+    pub fn ladder(&self) -> &WindowLadder {
+        &self.ladder
+    }
+
+    pub fn inner(&self) -> &ActiveEngine {
+        &self.inner
+    }
+
+    pub fn service(&self) -> &RuntimeService {
+        &self.service
+    }
+
+    /// Count points in the circle through the best-fitting artifact;
+    /// native scan when the circle outgrows the ladder. Returns
+    /// (total, per-class counts).
+    fn count_via_pjrt(&self, cx: u32, cy: u32, r: u32, k: usize) -> Result<(u64, Vec<f32>)> {
+        let grid = self.inner.grid();
+        let metric = self.inner.params().metric;
+        if let Some(w) = self.ladder.select(r) {
+            let name = format!("disk_count_w{w}_b1");
+            let c = grid.num_classes();
+            let mut window = vec![0f32; c * w * w];
+            grid.crop_classes_f32(cx, cy, w, &mut window);
+            let out =
+                self.service
+                    .disk_count(&name, window, r as f32, k as f32, metric == Metric::L1)?;
+            return Ok((out.total as u64, out.class_counts));
+        }
+        // fallback: native row-span scan (radius beyond the ladder)
+        let mut cls = vec![0u64; grid.num_classes()];
+        scan::class_counts_in_disk(grid, cx, cy, r, metric, &mut cls);
+        let total: u64 = cls.iter().sum();
+        Ok((total, cls.iter().map(|&v| v as f32).collect()))
+    }
+
+    /// Run the search loop with PJRT-backed counting.
+    pub fn search(&self, q: &[f64], k: usize) -> Result<FinalCircle> {
+        let mut err: Option<AsnnError> = None;
+        let circle = self.inner.search_with(q, k, |cx, cy, r| {
+            match self.count_via_pjrt(cx, cy, r, k) {
+                Ok((n, _)) => n,
+                Err(e) => {
+                    err = Some(e);
+                    0
+                }
+            }
+        })?;
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok(circle)
+    }
+
+    /// Batched search: run many queries' radius loops in lockstep,
+    /// grouping same-window queries into the `disk_count_w*_b16`
+    /// artifacts each round. All queries start at the same r₀, so the
+    /// first rounds batch perfectly; stragglers finish in smaller
+    /// groups or singly. Returns one final circle per query.
+    pub fn batch_search(&self, queries: &[Vec<f64>], k: usize) -> Result<Vec<FinalCircle>> {
+        use crate::active::radius::{RadiusPolicy, Step};
+        use crate::active::{SearchStep, SearchTrace};
+
+        let grid = self.inner.grid();
+        let geom = grid.geometry();
+        let params = self.inner.params();
+        let metric_l1 = params.metric == Metric::L1;
+        let r_max = (grid.resolution() as f64 * std::f64::consts::SQRT_2).ceil() as u32;
+
+        struct QState {
+            cx: u32,
+            cy: u32,
+            r: u32,
+            policy: RadiusPolicy,
+            trace: SearchTrace,
+            done: Option<FinalCircle>,
+            recount: bool,
+        }
+        let mut states: Vec<QState> = Vec::with_capacity(queries.len());
+        for q in queries {
+            if q.len() != 2 {
+                return Err(AsnnError::Query("batch_search requires 2-D queries".into()));
+            }
+            let (cx, cy) = geom.pixel_of(q[0], q[1]);
+            states.push(QState {
+                cx,
+                cy,
+                r: params.r0.max(1),
+                policy: RadiusPolicy::new(k, params.tolerance, params.max_iters, r_max),
+                trace: SearchTrace::default(),
+                done: None,
+                recount: false,
+            });
+        }
+
+        loop {
+            // group live queries by their selected window size
+            let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            let mut native: Vec<usize> = Vec::new();
+            for (i, s) in states.iter().enumerate() {
+                if s.done.is_some() {
+                    continue;
+                }
+                match self.ladder.select(s.r) {
+                    Some(w) => groups.entry(w).or_default().push(i),
+                    None => native.push(i),
+                }
+            }
+            if groups.is_empty() && native.is_empty() {
+                break;
+            }
+
+            // counts for this round
+            let mut counts: Vec<(usize, u64)> = Vec::new();
+            for (w, idxs) in &groups {
+                let w = *w;
+                let b16 = format!("disk_count_w{w}_b16");
+                let use_batch = idxs.len() >= 2 && self.service.meta(&b16).is_some();
+                if use_batch {
+                    for chunk in idxs.chunks(16) {
+                        let mut windows = vec![0f32; 16 * grid.num_classes() * w * w];
+                        let mut rs = vec![1f32; 16];
+                        for (slot, &qi) in chunk.iter().enumerate() {
+                            let s = &states[qi];
+                            grid.crop_classes_f32(
+                                s.cx,
+                                s.cy,
+                                w,
+                                &mut windows[slot * grid.num_classes() * w * w
+                                    ..(slot + 1) * grid.num_classes() * w * w],
+                            );
+                            rs[slot] = s.r as f32;
+                        }
+                        let outs = self.service.disk_count_batch(
+                            &b16,
+                            windows,
+                            rs,
+                            k as f32,
+                            metric_l1,
+                        )?;
+                        for (slot, &qi) in chunk.iter().enumerate() {
+                            counts.push((qi, outs[slot].total as u64));
+                        }
+                    }
+                } else {
+                    for &qi in idxs {
+                        let s = &states[qi];
+                        let (n, _) = self.count_via_pjrt(s.cx, s.cy, s.r, k)?;
+                        counts.push((qi, n));
+                    }
+                }
+            }
+            for &qi in &native {
+                let s = &states[qi];
+                let (n, _) = self.count_via_pjrt(s.cx, s.cy, s.r, k)?;
+                counts.push((qi, n));
+            }
+
+            // advance every live query one policy step
+            for (qi, n) in counts {
+                let s = &mut states[qi];
+                if s.recount {
+                    // this round's count was the settle-radius recount
+                    s.trace.steps.push(SearchStep { r: s.r, n });
+                    s.trace.converged = true;
+                    s.done = Some(FinalCircle {
+                        cx: s.cx,
+                        cy: s.cy,
+                        r: s.r,
+                        n_inside: n,
+                        trace: std::mem::take(&mut s.trace),
+                    });
+                    continue;
+                }
+                s.trace.steps.push(SearchStep { r: s.r, n });
+                match s.policy.step(s.r, n) {
+                    Step::Done => {
+                        s.trace.converged = true;
+                        s.done = Some(FinalCircle {
+                            cx: s.cx,
+                            cy: s.cy,
+                            r: s.r,
+                            n_inside: n,
+                            trace: std::mem::take(&mut s.trace),
+                        });
+                    }
+                    Step::Settle(rs) => {
+                        if rs == s.r {
+                            s.trace.converged = true;
+                            s.done = Some(FinalCircle {
+                                cx: s.cx,
+                                cy: s.cy,
+                                r: s.r,
+                                n_inside: n,
+                                trace: std::mem::take(&mut s.trace),
+                            });
+                        } else {
+                            // recount at the settle radius next round
+                            s.r = rs;
+                            s.recount = true;
+                        }
+                    }
+                    Step::Continue(next) => s.r = next,
+                    Step::Exhausted => {
+                        s.trace.converged = false;
+                        s.done = Some(FinalCircle {
+                            cx: s.cx,
+                            cy: s.cy,
+                            r: s.r,
+                            n_inside: n,
+                            trace: std::mem::take(&mut s.trace),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(states.into_iter().map(|s| s.done.unwrap()).collect())
+    }
+
+    /// Batched classification via [`batch_search`](Self::batch_search).
+    pub fn batch_classify(&self, queries: &[Vec<f64>], k: usize) -> Result<Vec<u16>> {
+        let circles = self.batch_search(queries, k)?;
+        circles
+            .iter()
+            .map(|c| {
+                let (_, cls) = self.count_via_pjrt(c.cx, c.cy, c.r, k)?;
+                Ok(cls
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| {
+                        a.1.partial_cmp(b.1)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(b.0.cmp(&a.0))
+                    })
+                    .map(|(c, _)| c as u16)
+                    .unwrap_or(0))
+            })
+            .collect()
+    }
+
+    /// Candidate extraction through the `neighbor_scan` artifact (falls
+    /// back to the native collect when K_MAX or the ladder is exceeded).
+    fn candidates(&self, circle: &FinalCircle) -> Result<Vec<scan::Candidate>> {
+        let grid = self.inner.grid();
+        let metric = self.inner.params().metric;
+        if let Some(w) = self.ladder.select(circle.r) {
+            let name = format!("neighbor_scan_w{w}");
+            if let Some(meta) = self.service.meta(&name) {
+                let k_max = meta.k_max as u64;
+                // a pixel may hold several points; the artifact ranks
+                // pixels, so only use it when every occupied pixel fits
+                if circle.n_inside <= k_max {
+                    let mut window = vec![0f32; w * w];
+                    grid.crop_total_f32(circle.cx, circle.cy, w, &mut window);
+                    let out = self.service.neighbor_scan(
+                        &name,
+                        window,
+                        circle.r as f32,
+                        metric == Metric::L1,
+                    )?;
+                    let mut cands = Vec::new();
+                    let half = (w / 2) as i64;
+                    for (d, &idx) in out.dists.iter().zip(&out.indices) {
+                        if idx < 0 || !d.is_finite() {
+                            continue;
+                        }
+                        let wy = idx as i64 / w as i64;
+                        let wx = idx as i64 % w as i64;
+                        let gx = circle.cx as i64 - half + wx;
+                        let gy = circle.cy as i64 - half + wy;
+                        if gx < 0
+                            || gy < 0
+                            || gx >= grid.resolution() as i64
+                            || gy >= grid.resolution() as i64
+                        {
+                            continue;
+                        }
+                        for pid in grid.points_at(gx as u32, gy as u32) {
+                            cands.push(scan::Candidate {
+                                point_id: pid,
+                                pixel_dist: *d as f64,
+                            });
+                        }
+                    }
+                    return Ok(cands);
+                }
+            }
+        }
+        Ok(scan::collect_in_disk(grid, circle.cx, circle.cy, circle.r, metric))
+    }
+}
+
+impl NnEngine for ActivePjrtEngine {
+    fn name(&self) -> &'static str {
+        "active-pjrt"
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>> {
+        Ok(self.knn_stats(q, k)?.0)
+    }
+
+    fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        let circle = self.search(q, k)?;
+        let cands = self.candidates(&circle)?;
+        let grid = self.inner.grid();
+        let params = self.inner.params();
+        let px_len = grid.geometry().pixel_size()[0];
+        let data = self.inner.dataset();
+        let mut out: Vec<Neighbor> = match params.mode {
+            SearchMode::Approx => cands
+                .into_iter()
+                .map(|c| {
+                    let dist = match params.metric {
+                        Metric::L2 => c.pixel_dist.sqrt() * px_len,
+                        Metric::L1 => c.pixel_dist * px_len,
+                    };
+                    let label =
+                        data.as_ref().map(|d| d.label(c.point_id as usize)).unwrap_or(0);
+                    Neighbor { id: c.point_id, dist, label }
+                })
+                .collect(),
+            SearchMode::Refined => {
+                let data = data.as_ref().ok_or_else(|| {
+                    AsnnError::Query("refined mode requires the dataset".into())
+                })?;
+                cands
+                    .into_iter()
+                    .map(|c| {
+                        let id = c.point_id as usize;
+                        Neighbor {
+                            id: c.point_id,
+                            dist: data.dist2(id, q).sqrt(),
+                            label: data.label(id),
+                        }
+                    })
+                    .collect()
+            }
+        };
+        out.sort_by(|a, b| {
+            a.dist
+                .partial_cmp(&b.dist)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        out.truncate(k);
+        let work: u64 = circle
+            .trace
+            .steps
+            .iter()
+            .map(|s| scan::disk_pixels(s.r, params.metric))
+            .sum();
+        Ok((
+            out,
+            QueryStats {
+                work,
+                iterations: circle.trace.iterations() as u32,
+                converged: circle.trace.converged,
+            },
+        ))
+    }
+
+    /// Paper classification vote, with per-class counts produced by the
+    /// `disk_count` artifact at the final circle.
+    fn classify(&self, q: &[f64], k: usize) -> Result<u16> {
+        let circle = self.search(q, k)?;
+        let (_, class_counts) = self.count_via_pjrt(circle.cx, circle.cy, circle.r, k)?;
+        let best = class_counts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| {
+                a.1.partial_cmp(b.1)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.0.cmp(&a.0))
+            })
+            .map(|(c, _)| c as u16)
+            .unwrap_or(0);
+        Ok(best)
+    }
+}

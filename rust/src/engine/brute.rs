@@ -1,0 +1,142 @@
+//! Exact brute-force kNN — the paper's "original kNN" ground truth.
+//!
+//! Linear scan with a bounded top-k heap. O(N·d) per query: the blue
+//! crosses in Fig. 3 that grow linearly with N.
+
+use std::sync::Arc;
+
+use super::{Neighbor, NnEngine, QueryStats, TopK};
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+
+/// Exact linear-scan engine.
+pub struct BruteEngine {
+    data: Arc<Dataset>,
+}
+
+impl BruteEngine {
+    pub fn new(data: Arc<Dataset>) -> Self {
+        Self { data }
+    }
+
+    pub fn dataset(&self) -> &Arc<Dataset> {
+        &self.data
+    }
+
+    fn check(&self, q: &[f64], k: usize) -> Result<()> {
+        if q.len() != self.data.dim {
+            return Err(AsnnError::Query(format!(
+                "query dim {} != dataset dim {}",
+                q.len(),
+                self.data.dim
+            )));
+        }
+        if k == 0 || k > self.data.len() {
+            return Err(AsnnError::Query(format!(
+                "k = {k} out of range for {} points",
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl NnEngine for BruteEngine {
+    fn name(&self) -> &'static str {
+        "brute"
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>> {
+        Ok(self.knn_stats(q, k)?.0)
+    }
+
+    fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        self.check(q, k)?;
+        let mut top = TopK::new(k);
+        let n = self.data.len();
+        for i in 0..n {
+            let d2 = self.data.dist2(i, q);
+            if d2 < top.worst() {
+                top.push(Neighbor { id: i as u32, dist: d2, label: self.data.label(i) });
+            }
+        }
+        let mut hits = top.into_sorted();
+        for h in &mut hits {
+            h.dist = h.dist.sqrt(); // convert squared → true distance once
+        }
+        Ok((hits, QueryStats { work: n as u64, iterations: 0, converged: true }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, generate_queries, SyntheticSpec};
+
+    fn engine(n: usize, seed: u64) -> BruteEngine {
+        BruteEngine::new(Arc::new(generate(&SyntheticSpec::paper_default(n, seed))))
+    }
+
+    #[test]
+    fn finds_self_at_distance_zero() {
+        let e = engine(100, 1);
+        let q = e.dataset().point(42).to_vec();
+        let hits = e.knn(&q, 1).unwrap();
+        assert_eq!(hits[0].id, 42);
+        assert!(hits[0].dist < 1e-12);
+    }
+
+    #[test]
+    fn results_sorted_ascending() {
+        let e = engine(500, 2);
+        for q in generate_queries(5, 2, 3) {
+            let hits = e.knn(&q, 11).unwrap();
+            assert_eq!(hits.len(), 11);
+            for w in hits.windows(2) {
+                assert!(w[0].dist <= w[1].dist);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_exhaustive_sort() {
+        let e = engine(200, 4);
+        let q = [0.3, 0.7];
+        let hits = e.knn(&q, 7).unwrap();
+        let mut all: Vec<(f64, u32)> = (0..200)
+            .map(|i| (e.dataset().dist2(i, &q).sqrt(), i as u32))
+            .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (h, (d, id)) in hits.iter().zip(all.iter()) {
+            assert!((h.dist - d).abs() < 1e-12);
+            assert_eq!(h.id, *id);
+        }
+    }
+
+    #[test]
+    fn validates_inputs() {
+        let e = engine(10, 5);
+        assert!(e.knn(&[0.5], 3).is_err()); // wrong dim
+        assert!(e.knn(&[0.5, 0.5], 0).is_err()); // k = 0
+        assert!(e.knn(&[0.5, 0.5], 11).is_err()); // k > n
+    }
+
+    #[test]
+    fn stats_report_full_scan() {
+        let e = engine(321, 6);
+        let (_, st) = e.knn_stats(&[0.1, 0.9], 3).unwrap();
+        assert_eq!(st.work, 321);
+        assert!(st.converged);
+    }
+
+    #[test]
+    fn classify_majority_of_labels() {
+        let e = engine(300, 7);
+        let label = e.classify(&[0.5, 0.5], 11).unwrap();
+        assert!(label < 3);
+    }
+}

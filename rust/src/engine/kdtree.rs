@@ -1,0 +1,208 @@
+//! KD-tree engine (Bentley 1975 — the paper's reference [6]).
+//!
+//! Median-split construction over an index permutation; exact
+//! branch-and-bound kNN with a bounded top-k heap. Expected O(log N)
+//! per query in low dimension — the "most efficient algorithm could
+//! take only log(N)" line in the paper's §1.
+
+use std::sync::Arc;
+
+use super::{Neighbor, NnEngine, QueryStats, TopK};
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+
+/// Flat-array KD-tree node (indices into `nodes`; u32::MAX = leaf end).
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    /// Point id at this node (split point).
+    point: u32,
+    /// Split axis.
+    axis: u8,
+    left: u32,
+    right: u32,
+}
+
+const NIL: u32 = u32::MAX;
+
+/// Exact KD-tree engine.
+pub struct KdTreeEngine {
+    data: Arc<Dataset>,
+    nodes: Vec<Node>,
+    root: u32,
+}
+
+impl KdTreeEngine {
+    pub fn build(data: Arc<Dataset>) -> Self {
+        let n = data.len();
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        let mut nodes = Vec::with_capacity(n);
+        let root = Self::build_rec(&data, &mut ids[..], 0, &mut nodes);
+        Self { data, nodes, root }
+    }
+
+    fn build_rec(data: &Dataset, ids: &mut [u32], depth: usize, nodes: &mut Vec<Node>) -> u32 {
+        if ids.is_empty() {
+            return NIL;
+        }
+        let axis = depth % data.dim;
+        let mid = ids.len() / 2;
+        // median partition by the axis coordinate
+        ids.select_nth_unstable_by(mid, |&a, &b| {
+            data.point(a as usize)[axis]
+                .partial_cmp(&data.point(b as usize)[axis])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let point = ids[mid];
+        let slot = nodes.len() as u32;
+        nodes.push(Node { point, axis: axis as u8, left: NIL, right: NIL });
+        let (lo, hi) = ids.split_at_mut(mid);
+        let left = Self::build_rec(data, lo, depth + 1, nodes);
+        let right = Self::build_rec(data, &mut hi[1..], depth + 1, nodes);
+        nodes[slot as usize].left = left;
+        nodes[slot as usize].right = right;
+        slot
+    }
+
+    pub fn dataset(&self) -> &Arc<Dataset> {
+        &self.data
+    }
+
+    fn search(&self, node: u32, q: &[f64], top: &mut TopK, work: &mut u64) {
+        if node == NIL {
+            return;
+        }
+        let nd = self.nodes[node as usize];
+        let pid = nd.point as usize;
+        *work += 1;
+        let d2 = self.data.dist2(pid, q);
+        if d2 < top.worst() {
+            top.push(Neighbor { id: nd.point, dist: d2, label: self.data.label(pid) });
+        }
+        let axis = nd.axis as usize;
+        let delta = q[axis] - self.data.point(pid)[axis];
+        let (near, far) = if delta < 0.0 { (nd.left, nd.right) } else { (nd.right, nd.left) };
+        self.search(near, q, top, work);
+        // prune the far side if the splitting plane is beyond the worst kept
+        if delta * delta < top.worst() {
+            self.search(far, q, top, work);
+        }
+    }
+
+    fn check(&self, q: &[f64], k: usize) -> Result<()> {
+        if q.len() != self.data.dim {
+            return Err(AsnnError::Query(format!(
+                "query dim {} != dataset dim {}",
+                q.len(),
+                self.data.dim
+            )));
+        }
+        if k == 0 || k > self.data.len() {
+            return Err(AsnnError::Query(format!(
+                "k = {k} out of range for {} points",
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl NnEngine for KdTreeEngine {
+    fn name(&self) -> &'static str {
+        "kdtree"
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>> {
+        Ok(self.knn_stats(q, k)?.0)
+    }
+
+    fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        self.check(q, k)?;
+        let mut top = TopK::new(k);
+        let mut work = 0u64;
+        self.search(self.root, q, &mut top, &mut work);
+        let mut hits = top.into_sorted();
+        for h in &mut hits {
+            h.dist = h.dist.sqrt();
+        }
+        Ok((hits, QueryStats { work, iterations: 0, converged: true }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, generate_queries, SyntheticSpec};
+    use crate::engine::brute::BruteEngine;
+
+    fn pair(n: usize, seed: u64) -> (KdTreeEngine, BruteEngine) {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(n, seed)));
+        (KdTreeEngine::build(ds.clone()), BruteEngine::new(ds))
+    }
+
+    #[test]
+    fn agrees_with_brute_force() {
+        let (kd, brute) = pair(800, 11);
+        for q in generate_queries(20, 2, 12) {
+            let a = kd.knn(&q, 11).unwrap();
+            let b = brute.knn(&q, 11).unwrap();
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x.dist - y.dist).abs() < 1e-12, "dists differ");
+            }
+            // id sets match (order can differ only on exact ties)
+            let mut ia: Vec<u32> = a.iter().map(|n| n.id).collect();
+            let mut ib: Vec<u32> = b.iter().map(|n| n.id).collect();
+            ia.sort();
+            ib.sort();
+            assert_eq!(ia, ib);
+        }
+    }
+
+    #[test]
+    fn prunes_most_of_the_tree() {
+        let (kd, _) = pair(20_000, 13);
+        let (_, st) = kd.knn_stats(&[0.5, 0.5], 11).unwrap();
+        assert!(st.work < 4_000, "visited {} of 20000", st.work);
+    }
+
+    #[test]
+    fn handles_k_equals_n() {
+        let (kd, brute) = pair(50, 14);
+        let a = kd.knn(&[0.2, 0.2], 50).unwrap();
+        let b = brute.knn(&[0.2, 0.2], 50).unwrap();
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x.dist - y.dist).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn validates_inputs() {
+        let (kd, _) = pair(10, 15);
+        assert!(kd.knn(&[0.5, 0.5, 0.5], 3).is_err());
+        assert!(kd.knn(&[0.5, 0.5], 0).is_err());
+        assert!(kd.knn(&[0.5, 0.5], 11).is_err());
+    }
+
+    #[test]
+    fn single_point_tree() {
+        let ds = Arc::new(
+            crate::data::Dataset::new(2, vec![0.4, 0.6], vec![0], 1).unwrap(),
+        );
+        let kd = KdTreeEngine::build(ds);
+        let hits = kd.knn(&[0.0, 0.0], 1).unwrap();
+        assert_eq!(hits[0].id, 0);
+    }
+
+    #[test]
+    fn duplicate_points_all_found() {
+        let pts = vec![0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.1, 0.1];
+        let ds = Arc::new(crate::data::Dataset::new(2, pts, vec![0, 0, 0, 1], 2).unwrap());
+        let kd = KdTreeEngine::build(ds);
+        let hits = kd.knn(&[0.5, 0.5], 3).unwrap();
+        assert!(hits.iter().all(|h| h.dist < 1e-12));
+    }
+}

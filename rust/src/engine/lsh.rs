@@ -1,0 +1,259 @@
+//! Locality-sensitive hashing engine (Indyk–Motwani — paper ref. [7]).
+//!
+//! p-stable (Gaussian projection) LSH: `L` tables, each hashing a point
+//! by `M` concatenated quantized random projections. Queries probe the
+//! query's bucket in every table (plus neighboring buckets via offset
+//! probing), then rank the candidate union exactly. Approximate — the
+//! recall/latency trade-off is exercised in the EXT-ENGINES bench.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::{Neighbor, NnEngine, QueryStats, TopK};
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+use crate::util::rng::Rng;
+
+/// LSH tuning parameters.
+#[derive(Debug, Clone)]
+pub struct LshParams {
+    /// Number of hash tables.
+    pub tables: usize,
+    /// Projections concatenated per table key.
+    pub projections: usize,
+    /// Quantization bucket width in data units.
+    pub bucket_width: f64,
+    /// Probe the ±1 offset of each projection (multiprobe) — trades
+    /// query time for recall.
+    pub multiprobe: bool,
+    pub seed: u64,
+}
+
+impl Default for LshParams {
+    fn default() -> Self {
+        Self { tables: 8, projections: 4, bucket_width: 0.05, multiprobe: true, seed: 0xA11CE }
+    }
+}
+
+struct Table {
+    /// Projection vectors, row-major `[projections × dim]`.
+    projections: Vec<f64>,
+    offsets: Vec<f64>,
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+/// Approximate LSH engine.
+pub struct LshEngine {
+    data: Arc<Dataset>,
+    params: LshParams,
+    tables: Vec<Table>,
+}
+
+impl LshEngine {
+    pub fn build(data: Arc<Dataset>, params: LshParams) -> Self {
+        let mut rng = Rng::new(params.seed);
+        let dim = data.dim;
+        let mut tables = Vec::with_capacity(params.tables);
+        for _ in 0..params.tables {
+            let mut projections = Vec::with_capacity(params.projections * dim);
+            let mut offsets = Vec::with_capacity(params.projections);
+            for _ in 0..params.projections {
+                for _ in 0..dim {
+                    projections.push(rng.normal());
+                }
+                offsets.push(rng.uniform(0.0, params.bucket_width));
+            }
+            let mut table = Table { projections, offsets, buckets: HashMap::new() };
+            for i in 0..data.len() {
+                let key = Self::key_of(&table, &params, data.point(i));
+                table.buckets.entry(key).or_default().push(i as u32);
+            }
+            tables.push(table);
+        }
+        Self { data, params, tables }
+    }
+
+    /// Quantized projections of `p`, for one table.
+    fn raw_hashes(table: &Table, params: &LshParams, p: &[f64]) -> Vec<i64> {
+        let dim = p.len();
+        (0..params.projections)
+            .map(|j| {
+                let proj = &table.projections[j * dim..(j + 1) * dim];
+                let dot: f64 = proj.iter().zip(p).map(|(a, b)| a * b).sum();
+                ((dot + table.offsets[j]) / params.bucket_width).floor() as i64
+            })
+            .collect()
+    }
+
+    /// Combine quantized projections into a single bucket key (FNV-1a).
+    fn combine(hashes: &[i64]) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for &v in hashes {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+
+    fn key_of(table: &Table, params: &LshParams, p: &[f64]) -> u64 {
+        Self::combine(&Self::raw_hashes(table, params, p))
+    }
+
+    pub fn dataset(&self) -> &Arc<Dataset> {
+        &self.data
+    }
+
+    fn check(&self, q: &[f64], k: usize) -> Result<()> {
+        if q.len() != self.data.dim {
+            return Err(AsnnError::Query(format!(
+                "query dim {} != dataset dim {}",
+                q.len(),
+                self.data.dim
+            )));
+        }
+        if k == 0 || k > self.data.len() {
+            return Err(AsnnError::Query(format!(
+                "k = {k} out of range for {} points",
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl NnEngine for LshEngine {
+    fn name(&self) -> &'static str {
+        "lsh"
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>> {
+        Ok(self.knn_stats(q, k)?.0)
+    }
+
+    fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        self.check(q, k)?;
+        let mut seen: Vec<bool> = vec![false; self.data.len()];
+        let mut top = TopK::new(k);
+        let mut work = 0u64;
+        for table in &self.tables {
+            let hashes = Self::raw_hashes(table, &self.params, q);
+            let mut keys = vec![Self::combine(&hashes)];
+            if self.params.multiprobe {
+                // probe ±1 on each projection (2·M extra buckets/table)
+                for j in 0..hashes.len() {
+                    for delta in [-1i64, 1] {
+                        let mut h = hashes.clone();
+                        h[j] += delta;
+                        keys.push(Self::combine(&h));
+                    }
+                }
+            }
+            for key in keys {
+                if let Some(bucket) = table.buckets.get(&key) {
+                    for &pid in bucket {
+                        if !seen[pid as usize] {
+                            seen[pid as usize] = true;
+                            work += 1;
+                            let d2 = self.data.dist2(pid as usize, q);
+                            if d2 < top.worst() {
+                                top.push(Neighbor {
+                                    id: pid,
+                                    dist: d2,
+                                    label: self.data.label(pid as usize),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut hits = top.into_sorted();
+        for h in &mut hits {
+            h.dist = h.dist.sqrt();
+        }
+        Ok((hits, QueryStats { work, iterations: 0, converged: true }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, generate_queries, SyntheticSpec};
+    use crate::engine::brute::BruteEngine;
+
+    fn engines(n: usize, seed: u64) -> (LshEngine, BruteEngine) {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(n, seed)));
+        (LshEngine::build(ds.clone(), LshParams::default()), BruteEngine::new(ds))
+    }
+
+    fn recall(a: &[Neighbor], truth: &[Neighbor]) -> f64 {
+        let truth_ids: Vec<u32> = truth.iter().map(|n| n.id).collect();
+        let hit = a.iter().filter(|n| truth_ids.contains(&n.id)).count();
+        hit as f64 / truth.len() as f64
+    }
+
+    #[test]
+    fn recall_is_high_on_uniform_2d() {
+        let (lsh, brute) = engines(5000, 31);
+        let mut total = 0.0;
+        let queries = generate_queries(20, 2, 32);
+        for q in &queries {
+            let a = lsh.knn(q, 11).unwrap();
+            let t = brute.knn(q, 11).unwrap();
+            total += recall(&a, &t);
+        }
+        let avg = total / queries.len() as f64;
+        assert!(avg > 0.6, "avg recall {avg}");
+    }
+
+    #[test]
+    fn probes_fraction_of_dataset() {
+        let (lsh, _) = engines(20_000, 33);
+        let (_, st) = lsh.knn_stats(&[0.5, 0.5], 11).unwrap();
+        assert!(st.work < 10_000, "probed {}", st.work);
+        assert!(st.work > 0);
+    }
+
+    #[test]
+    fn finds_exact_duplicate() {
+        let (lsh, _) = engines(2000, 34);
+        let q = lsh.dataset().point(100).to_vec();
+        let hits = lsh.knn(&q, 5).unwrap();
+        assert!(hits.iter().any(|h| h.id == 100 && h.dist < 1e-12));
+    }
+
+    #[test]
+    fn multiprobe_increases_candidates() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(5000, 35)));
+        let base = LshEngine::build(
+            ds.clone(),
+            LshParams { multiprobe: false, ..Default::default() },
+        );
+        let probed = LshEngine::build(ds, LshParams { multiprobe: true, ..Default::default() });
+        let (_, s0) = base.knn_stats(&[0.4, 0.4], 11).unwrap();
+        let (_, s1) = probed.knn_stats(&[0.4, 0.4], 11).unwrap();
+        assert!(s1.work >= s0.work);
+    }
+
+    #[test]
+    fn validates_inputs() {
+        let (lsh, _) = engines(100, 36);
+        assert!(lsh.knn(&[0.5], 3).is_err());
+        assert!(lsh.knn(&[0.5, 0.5], 0).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, _) = engines(1000, 37);
+        let (b, _) = engines(1000, 37);
+        let ha = a.knn(&[0.3, 0.3], 7).unwrap();
+        let hb = b.knn(&[0.3, 0.3], 7).unwrap();
+        assert_eq!(ha, hb);
+    }
+}

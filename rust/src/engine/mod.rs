@@ -1,0 +1,226 @@
+//! Nearest-neighbor engines behind a common trait.
+//!
+//! - [`brute`] — exact linear scan, the paper's "original kNN" ground
+//!   truth;
+//! - [`kdtree`] — Bentley '75 KD-tree (paper ref. [6]);
+//! - [`lsh`] — p-stable locality-sensitive hashing (paper ref. [7]);
+//! - [`active`] — the paper's contribution, pure rust;
+//! - [`active_pjrt`] — same algorithm with the circle-count/scan hot
+//!   spot executed by AOT-compiled XLA artifacts via PJRT;
+//! - [`active3d`] — the paper's §3 higher-dimension sketch over a
+//!   voxel volume (d = 3 Eq. 1).
+
+pub mod active;
+pub mod active3d;
+pub mod active_pjrt;
+pub mod brute;
+pub mod kdtree;
+pub mod lsh;
+
+use crate::error::Result;
+
+/// One returned neighbor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub id: u32,
+    /// Engine-native distance: true Euclidean for vector engines,
+    /// pixel-space distance for the active engine in `approx` mode,
+    /// true Euclidean after refinement in `refined` mode.
+    pub dist: f64,
+    pub label: u16,
+}
+
+/// Summary of one query's work (for benches and the coordinator).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QueryStats {
+    /// Distance evaluations / pixels touched (engine-specific unit).
+    pub work: u64,
+    /// Active-search iterations (0 for non-active engines).
+    pub iterations: u32,
+    /// Whether the engine converged exactly (active) / always true.
+    pub converged: bool,
+}
+
+/// A k-nearest-neighbor engine over a fixed dataset.
+pub trait NnEngine: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Number of indexed points.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// k nearest neighbors of `q`, sorted by ascending distance.
+    fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>>;
+
+    /// kNN with work accounting.
+    fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        let hits = self.knn(q, k)?;
+        Ok((hits, QueryStats { converged: true, ..Default::default() }))
+    }
+
+    /// Majority-vote classification over the k nearest neighbors.
+    /// The active engine overrides this with the paper's per-class
+    /// count-image vote.
+    fn classify(&self, q: &[f64], k: usize) -> Result<u16> {
+        let hits = self.knn(q, k)?;
+        Ok(majority_vote(hits.iter().map(|h| h.label)))
+    }
+}
+
+/// Majority vote with deterministic tie-breaking (lowest label wins —
+/// matters for reproducibility across engines).
+pub fn majority_vote(labels: impl Iterator<Item = u16>) -> u16 {
+    let mut counts: Vec<(u16, u32)> = Vec::new();
+    for l in labels {
+        match counts.iter_mut().find(|(lbl, _)| *lbl == l) {
+            Some((_, c)) => *c += 1,
+            None => counts.push((l, 1)),
+        }
+    }
+    counts
+        .into_iter()
+        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+        .map(|(l, _)| l)
+        .unwrap_or(0)
+}
+
+/// Bounded max-heap of the k best (smallest-distance) neighbors —
+/// shared by the brute and KD-tree engines.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    /// Max-heap by distance: `heap[0]` is the current worst of the best.
+    heap: Vec<Neighbor>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        Self { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    /// Current worst distance among the kept k (∞ until full).
+    #[inline]
+    pub fn worst(&self) -> f64 {
+        if self.heap.len() < self.k {
+            f64::INFINITY
+        } else {
+            self.heap[0].dist
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, n: Neighbor) {
+        if self.heap.len() < self.k {
+            self.heap.push(n);
+            self.sift_up(self.heap.len() - 1);
+        } else if n.dist < self.heap[0].dist {
+            self.heap[0] = n;
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].dist > self.heap[parent].dist {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < self.heap.len() && self.heap[l].dist > self.heap[largest].dist {
+                largest = l;
+            }
+            if r < self.heap.len() && self.heap[r].dist > self.heap[largest].dist {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    /// Extract ascending-by-distance, ties broken by id (determinism).
+    pub fn into_sorted(mut self) -> Vec<Neighbor> {
+        self.heap.sort_by(|a, b| {
+            a.dist
+                .partial_cmp(&b.dist)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        self.heap
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nb(id: u32, dist: f64) -> Neighbor {
+        Neighbor { id, dist, label: 0 }
+    }
+
+    #[test]
+    fn topk_keeps_smallest() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0, 3.0, 0.5].iter().enumerate() {
+            t.push(nb(i as u32, *d));
+        }
+        let out = t.into_sorted();
+        let dists: Vec<f64> = out.iter().map(|n| n.dist).collect();
+        assert_eq!(dists, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn topk_worst_tracks_heap() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.worst(), f64::INFINITY);
+        t.push(nb(0, 3.0));
+        assert_eq!(t.worst(), f64::INFINITY); // not yet full
+        t.push(nb(1, 1.0));
+        assert_eq!(t.worst(), 3.0);
+        t.push(nb(2, 2.0));
+        assert_eq!(t.worst(), 2.0);
+    }
+
+    #[test]
+    fn topk_underfull_returns_all() {
+        let mut t = TopK::new(10);
+        t.push(nb(0, 1.0));
+        t.push(nb(1, 0.5));
+        assert_eq!(t.into_sorted().len(), 2);
+    }
+
+    #[test]
+    fn majority_vote_basics() {
+        assert_eq!(majority_vote([1, 1, 2].into_iter()), 1);
+        assert_eq!(majority_vote([2, 2, 1, 1, 1].into_iter()), 1);
+        assert_eq!(majority_vote(std::iter::empty()), 0);
+    }
+
+    #[test]
+    fn majority_vote_tie_breaks_low() {
+        assert_eq!(majority_vote([2, 1].into_iter()), 1);
+        assert_eq!(majority_vote([3, 3, 0, 0].into_iter()), 0);
+    }
+}

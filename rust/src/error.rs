@@ -1,0 +1,100 @@
+//! Crate-wide error type.
+//!
+//! Every public fallible API in `asnn` returns [`Result`]. Variants are
+//! grouped by subsystem so callers can match on failure domains (config
+//! vs. data vs. runtime) without string inspection.
+
+use thiserror::Error;
+
+/// Crate-wide error enum.
+#[derive(Debug, Error)]
+pub enum AsnnError {
+    /// Configuration file / value errors (parse location included).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Dataset construction, I/O, or shape errors.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// Grid/index construction errors (resolution, bounds, dimension).
+    #[error("grid error: {0}")]
+    Grid(String),
+
+    /// Query-time errors (bad k, point outside bounds, engine misuse).
+    #[error("query error: {0}")]
+    Query(String),
+
+    /// PJRT runtime errors (artifact load/compile/execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / server / protocol errors.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Wire-protocol parse errors (malformed client request).
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, AsnnError>;
+
+impl AsnnError {
+    /// Short machine-readable tag used by the wire protocol.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            AsnnError::Config(_) => "config",
+            AsnnError::Data(_) => "data",
+            AsnnError::Grid(_) => "grid",
+            AsnnError::Query(_) => "query",
+            AsnnError::Runtime(_) => "runtime",
+            AsnnError::Coordinator(_) => "coordinator",
+            AsnnError::Protocol(_) => "protocol",
+            AsnnError::Io(_) => "io",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_domain() {
+        let e = AsnnError::Grid("resolution must be > 0".into());
+        assert!(e.to_string().contains("grid error"));
+        assert_eq!(e.tag(), "grid");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn fails() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "nope"))?;
+            Ok(())
+        }
+        assert!(matches!(fails(), Err(AsnnError::Io(_))));
+    }
+
+    #[test]
+    fn tags_are_distinct() {
+        let tags = [
+            AsnnError::Config(String::new()).tag(),
+            AsnnError::Data(String::new()).tag(),
+            AsnnError::Grid(String::new()).tag(),
+            AsnnError::Query(String::new()).tag(),
+            AsnnError::Runtime(String::new()).tag(),
+            AsnnError::Coordinator(String::new()).tag(),
+            AsnnError::Protocol(String::new()).tag(),
+        ];
+        let mut uniq = tags.to_vec();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), tags.len());
+    }
+}

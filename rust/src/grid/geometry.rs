@@ -1,0 +1,182 @@
+//! Mapping between data space and pixel space.
+//!
+//! The paper transforms points (and each query) "onto the same image".
+//! [`Geometry`] owns that affine map: data bounding box (optionally
+//! padded) → `resolution × resolution` pixels.
+
+use crate::error::{AsnnError, Result};
+
+/// Affine data-space ↔ pixel-space mapping for a square image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Geometry {
+    resolution: usize,
+    mins: [f64; 2],
+    maxs: [f64; 2],
+    /// Pixels per data unit, per axis.
+    scale: [f64; 2],
+}
+
+impl Geometry {
+    /// Build from data bounds with fractional `padding` (0.05 = 5 % of
+    /// the box added on every side). Degenerate axes (all points equal)
+    /// get a unit extent so the map stays invertible.
+    pub fn new(resolution: usize, mins: [f64; 2], maxs: [f64; 2], padding: f64) -> Result<Self> {
+        if resolution < 2 {
+            return Err(AsnnError::Grid("resolution must be >= 2".into()));
+        }
+        if !(0.0..0.5).contains(&padding) {
+            return Err(AsnnError::Grid("padding must be in [0, 0.5)".into()));
+        }
+        let mut lo = [0.0; 2];
+        let mut hi = [0.0; 2];
+        for d in 0..2 {
+            if !(mins[d].is_finite() && maxs[d].is_finite()) || mins[d] > maxs[d] {
+                return Err(AsnnError::Grid(format!(
+                    "invalid bounds on axis {d}: [{}, {}]",
+                    mins[d], maxs[d]
+                )));
+            }
+            let extent = (maxs[d] - mins[d]).max(f64::MIN_POSITIVE);
+            let extent = if extent <= f64::MIN_POSITIVE { 1.0 } else { extent };
+            let pad = extent * padding;
+            lo[d] = mins[d] - pad;
+            hi[d] = maxs[d] + pad;
+        }
+        let scale = [
+            resolution as f64 / (hi[0] - lo[0]),
+            resolution as f64 / (hi[1] - lo[1]),
+        ];
+        Ok(Self { resolution, mins: lo, maxs: hi, scale })
+    }
+
+    pub fn resolution(&self) -> usize {
+        self.resolution
+    }
+
+    pub fn bounds(&self) -> ([f64; 2], [f64; 2]) {
+        (self.mins, self.maxs)
+    }
+
+    /// Side length of one pixel in data units (per axis).
+    pub fn pixel_size(&self) -> [f64; 2] {
+        [1.0 / self.scale[0], 1.0 / self.scale[1]]
+    }
+
+    /// Map a data-space point to its pixel. Points outside the bounds
+    /// clamp to the border pixel (the paper does not specify behaviour
+    /// for out-of-hull queries; clamping keeps the scan well-defined).
+    #[inline]
+    pub fn pixel_of(&self, x: f64, y: f64) -> (u32, u32) {
+        let px = ((x - self.mins[0]) * self.scale[0]).floor();
+        let py = ((y - self.mins[1]) * self.scale[1]).floor();
+        let max = (self.resolution - 1) as f64;
+        (px.clamp(0.0, max) as u32, py.clamp(0.0, max) as u32)
+    }
+
+    /// Row-major cell index of a pixel.
+    #[inline]
+    pub fn cell_index(&self, px: u32, py: u32) -> u32 {
+        py * self.resolution as u32 + px
+    }
+
+    /// Inverse of [`cell_index`](Self::cell_index).
+    #[inline]
+    pub fn cell_to_pixel(&self, cell: u32) -> (u32, u32) {
+        let r = self.resolution as u32;
+        (cell % r, cell / r)
+    }
+
+    /// Data-space center of a pixel.
+    #[inline]
+    pub fn center_of(&self, px: u32, py: u32) -> (f64, f64) {
+        (
+            self.mins[0] + (px as f64 + 0.5) / self.scale[0],
+            self.mins[1] + (py as f64 + 0.5) / self.scale[1],
+        )
+    }
+
+    /// Convert a data-space length on axis 0 to pixels (used to map the
+    /// paper's pixel radius to data space and back).
+    #[inline]
+    pub fn len_to_pixels(&self, len: f64) -> f64 {
+        len * self.scale[0]
+    }
+
+    /// Convert a pixel count to a data-space length on axis 0.
+    #[inline]
+    pub fn pixels_to_len(&self, px: f64) -> f64 {
+        px / self.scale[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(res: usize) -> Geometry {
+        Geometry::new(res, [0.0, 0.0], [1.0, 1.0], 0.0).unwrap()
+    }
+
+    #[test]
+    fn corners_map_to_corner_pixels() {
+        let g = unit(100);
+        assert_eq!(g.pixel_of(0.0, 0.0), (0, 0));
+        assert_eq!(g.pixel_of(1.0, 1.0), (99, 99)); // max clamps to last pixel
+        assert_eq!(g.pixel_of(0.999, 0.0), (99, 0));
+    }
+
+    #[test]
+    fn out_of_bounds_clamps() {
+        let g = unit(10);
+        assert_eq!(g.pixel_of(-5.0, 0.5), (0, 5));
+        assert_eq!(g.pixel_of(2.0, 0.5), (9, 5));
+    }
+
+    #[test]
+    fn cell_roundtrip() {
+        let g = unit(37);
+        for &(px, py) in &[(0, 0), (36, 36), (5, 20), (20, 5)] {
+            assert_eq!(g.cell_to_pixel(g.cell_index(px, py)), (px, py));
+        }
+    }
+
+    #[test]
+    fn center_is_inside_pixel() {
+        let g = unit(10);
+        let (cx, cy) = g.center_of(3, 7);
+        assert_eq!(g.pixel_of(cx, cy), (3, 7));
+    }
+
+    #[test]
+    fn padding_expands_bounds() {
+        let g = Geometry::new(100, [0.0, 0.0], [1.0, 1.0], 0.1).unwrap();
+        let (mins, maxs) = g.bounds();
+        assert!(mins[0] < 0.0 && maxs[0] > 1.0);
+        // padded geometry keeps interior points interior
+        let (px, py) = g.pixel_of(0.0, 0.0);
+        assert!(px > 0 && py > 0);
+    }
+
+    #[test]
+    fn degenerate_axis_handled() {
+        let g = Geometry::new(16, [0.5, 0.0], [0.5, 1.0], 0.0).unwrap();
+        let (px, _) = g.pixel_of(0.5, 0.5);
+        assert!(px < 16);
+    }
+
+    #[test]
+    fn invalid_bounds_rejected() {
+        assert!(Geometry::new(16, [1.0, 0.0], [0.0, 1.0], 0.0).is_err());
+        assert!(Geometry::new(16, [f64::NAN, 0.0], [1.0, 1.0], 0.0).is_err());
+        assert!(Geometry::new(1, [0.0, 0.0], [1.0, 1.0], 0.0).is_err());
+        assert!(Geometry::new(16, [0.0, 0.0], [1.0, 1.0], 0.9).is_err());
+    }
+
+    #[test]
+    fn length_conversions_invert() {
+        let g = unit(200);
+        let px = g.len_to_pixels(0.25);
+        assert!((px - 50.0).abs() < 1e-9);
+        assert!((g.pixels_to_len(px) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,408 @@
+//! The retina-space index: rasterized per-class count images plus a
+//! pixel→point-id bucket index for exact neighbor recovery.
+//!
+//! The paper (§2) transforms the N points "onto an image", and for
+//! classification keeps "as many images as the number of classes, each
+//! pixel keeps the number of data points on it". [`MultiGrid`] is
+//! exactly that, with two additions needed for a production system:
+//!
+//! 1. a `total` count image (sum over classes) so the radius-adaptation
+//!    scan touches 2 bytes per pixel instead of `2·C`;
+//! 2. a compact CSR-like cell→point-id map so the final circle can be
+//!    resolved back to true point identities (and re-ranked by exact
+//!    distance in `refined` mode).
+
+pub mod geometry;
+pub mod pyramid;
+pub mod volume;
+
+pub use geometry::Geometry;
+pub use pyramid::Pyramid;
+pub use volume::VolumeGrid;
+
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+
+/// Per-class count images over a square pixel grid, plus point buckets.
+#[derive(Debug, Clone)]
+pub struct MultiGrid {
+    geom: Geometry,
+    num_classes: usize,
+    /// Total counts, row-major `[y * R + x]`.
+    total: Vec<u16>,
+    /// Per-class counts, interleaved `[(y * R + x) * C + c]`.
+    class_counts: Vec<u16>,
+    /// `(cell, point_id)` sorted by cell — CSR without the offsets array
+    /// (binary search keeps memory at 8 B/point instead of 4 B/cell).
+    cell_points: Vec<(u32, u32)>,
+    /// Per-point labels (bucket-driven class voting without the dataset).
+    labels: Vec<u16>,
+    /// Per-row prefix sums of `total`: `row_prefix[y*(R+1)+x]` = points
+    /// in row `y`, columns `[0, x)`. Makes any row-span count O(1), so a
+    /// disk count is O(r) instead of O(πr²) — the §Perf headline.
+    row_prefix: Vec<u32>,
+    n_points: usize,
+}
+
+impl MultiGrid {
+    /// Rasterize a dataset onto an `resolution × resolution` image.
+    /// Only 2-D datasets rasterize to a flat image (the paper's setting;
+    /// see DESIGN.md §5 for the d > 2 discussion).
+    pub fn build(ds: &Dataset, resolution: usize) -> Result<Self> {
+        Self::build_padded(ds, resolution, 0.0)
+    }
+
+    /// [`build`](Self::build) with fractional padding around the data
+    /// bounding box (so fresh queries near the hull map inside).
+    pub fn build_padded(ds: &Dataset, resolution: usize, padding: f64) -> Result<Self> {
+        if ds.dim != 2 {
+            return Err(AsnnError::Grid(format!(
+                "MultiGrid requires dim == 2 (got {}); rasterizing d>2 needs O(R^d) memory — see DESIGN.md",
+                ds.dim
+            )));
+        }
+        if resolution < 8 {
+            return Err(AsnnError::Grid("resolution must be >= 8".into()));
+        }
+        if ds.is_empty() {
+            return Err(AsnnError::Grid("cannot rasterize an empty dataset".into()));
+        }
+        let (mins, maxs) = ds.bounds();
+        let geom = Geometry::new(resolution, [mins[0], mins[1]], [maxs[0], maxs[1]], padding)?;
+
+        let r = resolution;
+        let c = ds.num_classes;
+        let mut total = vec![0u16; r * r];
+        let mut class_counts = vec![0u16; r * r * c];
+        let mut cell_points: Vec<(u32, u32)> = Vec::with_capacity(ds.len());
+
+        for i in 0..ds.len() {
+            let p = ds.point(i);
+            let (px, py) = geom.pixel_of(p[0], p[1]);
+            let cell = geom.cell_index(px, py);
+            total[cell as usize] = total[cell as usize].saturating_add(1);
+            let ci = cell as usize * c + ds.label(i) as usize;
+            class_counts[ci] = class_counts[ci].saturating_add(1);
+            cell_points.push((cell, i as u32));
+        }
+        cell_points.sort_unstable();
+
+        // per-row prefix sums over the total image (O(1) span counts)
+        let mut row_prefix = vec![0u32; r * (r + 1)];
+        for y in 0..r {
+            let mut acc = 0u32;
+            let base = y * (r + 1);
+            for x in 0..r {
+                acc += total[y * r + x] as u32;
+                row_prefix[base + x + 1] = acc;
+            }
+        }
+
+        Ok(Self {
+            geom,
+            num_classes: c,
+            total,
+            class_counts,
+            cell_points,
+            labels: ds.labels.clone(),
+            row_prefix,
+            n_points: ds.len(),
+        })
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+
+    pub fn resolution(&self) -> usize {
+        self.geom.resolution()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.n_points
+    }
+
+    /// Total point count at pixel `(px, py)`.
+    #[inline]
+    pub fn count_at(&self, px: u32, py: u32) -> u16 {
+        self.total[self.geom.cell_index(px, py) as usize]
+    }
+
+    /// Raw total-count image row (for the scan hot path).
+    #[inline]
+    pub fn total_row(&self, py: u32) -> &[u16] {
+        let r = self.geom.resolution();
+        &self.total[py as usize * r..(py as usize + 1) * r]
+    }
+
+    /// Full total-count image (row-major), e.g. for PJRT window crops.
+    pub fn total_image(&self) -> &[u16] {
+        &self.total
+    }
+
+    /// Per-class counts at a pixel, as a slice of length `num_classes`.
+    #[inline]
+    pub fn class_counts_at(&self, px: u32, py: u32) -> &[u16] {
+        let base = self.geom.cell_index(px, py) as usize * self.num_classes;
+        &self.class_counts[base..base + self.num_classes]
+    }
+
+    /// Point ids stored in a cell (empty slice if none).
+    pub fn points_in_cell(&self, cell: u32) -> &[(u32, u32)] {
+        let lo = self.cell_points.partition_point(|&(c, _)| c < cell);
+        let hi = self.cell_points.partition_point(|&(c, _)| c <= cell);
+        &self.cell_points[lo..hi]
+    }
+
+    /// All `(cell, point_id)` entries whose cell lies in the inclusive
+    /// range `[cell0, cell1]` — one binary search pair per disk *row*
+    /// instead of per pixel (cells in a row are contiguous).
+    #[inline]
+    pub fn points_in_cell_range(&self, cell0: u32, cell1: u32) -> &[(u32, u32)] {
+        let lo = self.cell_points.partition_point(|&(c, _)| c < cell0);
+        let hi = self.cell_points.partition_point(|&(c, _)| c <= cell1);
+        &self.cell_points[lo..hi]
+    }
+
+    /// Label of a point id (copied from the dataset at build time).
+    #[inline]
+    pub fn label_of(&self, pid: u32) -> u16 {
+        self.labels[pid as usize]
+    }
+
+    /// Points in row `py`, columns `[x0, x1]` inclusive — O(1) via the
+    /// row prefix table.
+    #[inline]
+    pub fn row_span_count(&self, py: u32, x0: u32, x1: u32) -> u32 {
+        debug_assert!(x0 <= x1);
+        let r1 = self.geom.resolution() + 1;
+        let base = py as usize * r1;
+        self.row_prefix[base + x1 as usize + 1] - self.row_prefix[base + x0 as usize]
+    }
+
+    /// Point ids at pixel `(px, py)`.
+    pub fn points_at(&self, px: u32, py: u32) -> impl Iterator<Item = u32> + '_ {
+        self.points_in_cell(self.geom.cell_index(px, py))
+            .iter()
+            .map(|&(_, pid)| pid)
+    }
+
+    /// Number of distinct occupied cells.
+    pub fn occupied_cells(&self) -> usize {
+        let mut n = 0;
+        let mut last = u32::MAX;
+        for &(c, _) in &self.cell_points {
+            if c != last {
+                n += 1;
+                last = c;
+            }
+        }
+        n
+    }
+
+    /// Fraction of points that share a pixel with another point — the
+    /// paper's §2 overlap/accuracy concern, quantified.
+    pub fn overlap_fraction(&self) -> f64 {
+        if self.n_points == 0 {
+            return 0.0;
+        }
+        let mut overlapped = 0usize;
+        let mut i = 0;
+        while i < self.cell_points.len() {
+            let cell = self.cell_points[i].0;
+            let mut j = i + 1;
+            while j < self.cell_points.len() && self.cell_points[j].0 == cell {
+                j += 1;
+            }
+            if j - i > 1 {
+                overlapped += j - i;
+            }
+            i = j;
+        }
+        overlapped as f64 / self.n_points as f64
+    }
+
+    /// Approximate resident memory of the index in bytes (the paper's
+    /// resolution/memory trade-off, measured).
+    pub fn memory_bytes(&self) -> usize {
+        self.total.len() * 2
+            + self.class_counts.len() * 2
+            + self.cell_points.len() * 8
+            + self.labels.len() * 2
+            + self.row_prefix.len() * 4
+    }
+
+    /// Crop a `w × w` window of the total-count image centered at
+    /// `(cx, cy)` into `out` as f32 (the PJRT artifact input layout).
+    /// Out-of-image pixels are zero-filled.
+    pub fn crop_total_f32(&self, cx: u32, cy: u32, w: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), w * w);
+        out.fill(0.0);
+        let r = self.geom.resolution() as i64;
+        let half = (w / 2) as i64;
+        let (cx, cy) = (cx as i64, cy as i64);
+        for wy in 0..w as i64 {
+            let gy = cy - half + wy;
+            if gy < 0 || gy >= r {
+                continue;
+            }
+            let x0 = (cx - half).max(0);
+            let x1 = (cx - half + w as i64).min(r);
+            if x0 >= x1 {
+                continue;
+            }
+            let src0 = (gy * r + x0) as usize;
+            let dst0 = (wy * w as i64 + (x0 - (cx - half))) as usize;
+            for (dst, src) in (dst0..).zip(src0..(src0 + (x1 - x0) as usize)) {
+                out[dst] = self.total[src] as f32;
+            }
+        }
+    }
+
+    /// Same as [`crop_total_f32`](Self::crop_total_f32) but for the
+    /// per-class images: `out` has layout `[C, w, w]`.
+    pub fn crop_classes_f32(&self, cx: u32, cy: u32, w: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.num_classes * w * w);
+        out.fill(0.0);
+        let r = self.geom.resolution() as i64;
+        let half = (w / 2) as i64;
+        let (cx, cy) = (cx as i64, cy as i64);
+        let c = self.num_classes;
+        for wy in 0..w as i64 {
+            let gy = cy - half + wy;
+            if gy < 0 || gy >= r {
+                continue;
+            }
+            for wx in 0..w as i64 {
+                let gx = cx - half + wx;
+                if gx < 0 || gx >= r {
+                    continue;
+                }
+                let base = ((gy * r + gx) as usize) * c;
+                for ci in 0..c {
+                    let v = self.class_counts[base + ci];
+                    if v != 0 {
+                        out[ci * w * w + (wy as usize) * w + wx as usize] = v as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn grid(n: usize, res: usize) -> (Dataset, MultiGrid) {
+        let ds = generate(&SyntheticSpec::paper_default(n, 7));
+        let g = MultiGrid::build(&ds, res).unwrap();
+        (ds, g)
+    }
+
+    #[test]
+    fn counts_sum_to_n() {
+        let (ds, g) = grid(2000, 128);
+        let total: u64 = g.total.iter().map(|&v| v as u64).sum();
+        assert_eq!(total, ds.len() as u64);
+        let class_total: u64 = g.class_counts.iter().map(|&v| v as u64).sum();
+        assert_eq!(class_total, ds.len() as u64);
+    }
+
+    #[test]
+    fn per_class_matches_total() {
+        let (_, g) = grid(2000, 128);
+        for py in 0..128u32 {
+            for px in 0..128u32 {
+                let t = g.count_at(px, py) as u32;
+                let c: u32 = g.class_counts_at(px, py).iter().map(|&v| v as u32).sum();
+                assert_eq!(t, c);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_lookup_recovers_all_points() {
+        let (ds, g) = grid(500, 64);
+        let mut recovered = 0;
+        for py in 0..64u32 {
+            for px in 0..64u32 {
+                recovered += g.points_at(px, py).count();
+            }
+        }
+        assert_eq!(recovered, ds.len());
+    }
+
+    #[test]
+    fn points_map_to_their_own_pixel() {
+        let (ds, g) = grid(300, 256);
+        for i in 0..ds.len() {
+            let p = ds.point(i);
+            let (px, py) = g.geometry().pixel_of(p[0], p[1]);
+            assert!(g.points_at(px, py).any(|pid| pid as usize == i));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let ds3 = crate::data::Dataset::new(3, vec![0.0; 9], vec![0, 0, 0], 1).unwrap();
+        assert!(MultiGrid::build(&ds3, 64).is_err());
+        let ds = generate(&SyntheticSpec::paper_default(10, 1));
+        assert!(MultiGrid::build(&ds, 4).is_err());
+    }
+
+    #[test]
+    fn overlap_decreases_with_resolution() {
+        let ds = generate(&SyntheticSpec::paper_default(5000, 3));
+        let low = MultiGrid::build(&ds, 64).unwrap().overlap_fraction();
+        let high = MultiGrid::build(&ds, 2048).unwrap().overlap_fraction();
+        assert!(low > high, "low={low} high={high}");
+        assert!(high < 0.05);
+    }
+
+    #[test]
+    fn crop_total_center_and_edges() {
+        let (_, g) = grid(1000, 128);
+        let w = 16;
+        let mut out = vec![0f32; w * w];
+        g.crop_total_f32(64, 64, w, &mut out);
+        // window sum equals direct pixel sum
+        let mut direct = 0f32;
+        for wy in 0..w as u32 {
+            for wx in 0..w as u32 {
+                direct += g.count_at(64 - 8 + wx, 64 - 8 + wy) as f32;
+            }
+        }
+        assert_eq!(out.iter().sum::<f32>(), direct);
+        // corner crop zero-fills out-of-image area without panicking
+        g.crop_total_f32(0, 0, w, &mut out);
+        assert!(out.iter().sum::<f32>() >= 0.0);
+    }
+
+    #[test]
+    fn crop_classes_layout() {
+        let (_, g) = grid(1000, 128);
+        let w = 8;
+        let mut per_class = vec![0f32; 3 * w * w];
+        let mut total = vec![0f32; w * w];
+        g.crop_classes_f32(40, 40, w, &mut per_class);
+        g.crop_total_f32(40, 40, w, &mut total);
+        for i in 0..w * w {
+            let s: f32 = (0..3).map(|c| per_class[c * w * w + i]).sum();
+            assert_eq!(s, total[i]);
+        }
+    }
+
+    #[test]
+    fn memory_accounting_scales_with_resolution() {
+        let ds = generate(&SyntheticSpec::paper_default(1000, 5));
+        let small = MultiGrid::build(&ds, 64).unwrap().memory_bytes();
+        let big = MultiGrid::build(&ds, 512).unwrap().memory_bytes();
+        assert!(big > small * 16, "small={small} big={big}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Multi-resolution count pyramid — the "zooming in and out" of the
+//! paper's human-visual-system metaphor, made concrete.
+//!
+//! Level 0 is the full-resolution total-count image; each higher level
+//! halves the resolution by summing 2×2 blocks. Two uses:
+//!
+//! - **density-informed r₀** ([`Pyramid::suggest_r0`]): a coarse level
+//!   gives a local density estimate in O(1), replacing the paper's
+//!   fixed r₀ = 100 that §3 itself calls "too small";
+//! - **coarse-to-fine counting**: a circle count at a coarse level
+//!   bounds the fine count, letting the engine skip scan iterations.
+
+use super::MultiGrid;
+
+/// Summed 2×2 reduction pyramid over the total-count image.
+#[derive(Debug, Clone)]
+pub struct Pyramid {
+    /// `levels[l]` is a `res_l × res_l` row-major u32 image.
+    levels: Vec<Vec<u32>>,
+    /// Side length per level.
+    resolutions: Vec<usize>,
+}
+
+impl Pyramid {
+    /// Build from a grid. Levels stop when resolution would drop
+    /// below 8 pixels.
+    pub fn build(grid: &MultiGrid) -> Self {
+        let r0 = grid.resolution();
+        let mut levels: Vec<Vec<u32>> = Vec::new();
+        let mut resolutions = Vec::new();
+        let base: Vec<u32> = grid.total_image().iter().map(|&v| v as u32).collect();
+        levels.push(base);
+        resolutions.push(r0);
+        loop {
+            let prev_res = *resolutions.last().unwrap();
+            let next_res = prev_res / 2;
+            if next_res < 8 {
+                break;
+            }
+            let prev = levels.last().unwrap();
+            let mut next = vec![0u32; next_res * next_res];
+            for y in 0..next_res {
+                for x in 0..next_res {
+                    let mut s = 0u32;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let sy = y * 2 + dy;
+                            let sx = x * 2 + dx;
+                            if sy < prev_res && sx < prev_res {
+                                s += prev[sy * prev_res + sx];
+                            }
+                        }
+                    }
+                    next[y * next_res + x] = s;
+                }
+            }
+            levels.push(next);
+            resolutions.push(next_res);
+        }
+        Self { levels, resolutions }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn resolution(&self, level: usize) -> usize {
+        self.resolutions[level]
+    }
+
+    /// Count at a pixel of a level (pixel given in level-0 coordinates).
+    pub fn count_at(&self, level: usize, px0: u32, py0: u32) -> u32 {
+        let shift = level as u32;
+        let res = self.resolutions[level];
+        let x = (px0 >> shift).min(res as u32 - 1) as usize;
+        let y = (py0 >> shift).min(res as u32 - 1) as usize;
+        self.levels[level][y * res + x]
+    }
+
+    /// Local density (points per level-0 pixel²) around `(px, py)`,
+    /// measured over a `3×3` block of the given level.
+    pub fn local_density(&self, level: usize, px0: u32, py0: u32) -> f64 {
+        let shift = level as u32;
+        let res = self.resolutions[level] as i64;
+        let cx = (px0 >> shift) as i64;
+        let cy = (py0 >> shift) as i64;
+        let mut count = 0u64;
+        let mut cells = 0u64;
+        for dy in -1..=1i64 {
+            for dx in -1..=1i64 {
+                let x = cx + dx;
+                let y = cy + dy;
+                if x >= 0 && x < res && y >= 0 && y < res {
+                    count += self.levels[level][(y * res + x) as usize] as u64;
+                    cells += 1;
+                }
+            }
+        }
+        let pixels_per_cell = (1u64 << (2 * level)) as f64;
+        count as f64 / (cells as f64 * pixels_per_cell)
+    }
+
+    /// Density-informed initial radius: solve `k ≈ π r² ρ` for `r` using
+    /// the local density at a mid pyramid level. Clamped to `[1, res/2]`.
+    pub fn suggest_r0(&self, k: usize, px: u32, py: u32) -> u32 {
+        let level = (self.num_levels() / 2).min(self.num_levels() - 1);
+        let rho = self.local_density(level, px, py);
+        let res = self.resolutions[0] as f64;
+        if rho <= 0.0 {
+            // empty neighbourhood: start wide
+            return (res / 4.0) as u32;
+        }
+        let r = (k as f64 / (std::f64::consts::PI * rho)).sqrt();
+        (r.round() as u32).clamp(1, (res / 2.0) as u32)
+    }
+
+    /// Total memory of all levels in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.levels.iter().map(|l| l.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn pyr(n: usize, res: usize) -> (MultiGrid, Pyramid) {
+        let ds = generate(&SyntheticSpec::paper_default(n, 13));
+        let g = MultiGrid::build(&ds, res).unwrap();
+        let p = Pyramid::build(&g);
+        (g, p)
+    }
+
+    #[test]
+    fn level_sums_preserved() {
+        let (g, p) = pyr(3000, 256);
+        let n = g.n_points() as u64;
+        for l in 0..p.num_levels() {
+            let s: u64 = p.levels[l].iter().map(|&v| v as u64).sum();
+            assert_eq!(s, n, "level {l}");
+        }
+    }
+
+    #[test]
+    fn level_count_and_resolutions() {
+        let (_, p) = pyr(100, 256);
+        assert_eq!(p.resolution(0), 256);
+        assert_eq!(p.resolution(1), 128);
+        assert!(p.num_levels() >= 5);
+        // stops before dropping under 8
+        assert!(p.resolution(p.num_levels() - 1) >= 8);
+    }
+
+    #[test]
+    fn count_at_matches_grid_at_level0() {
+        let (g, p) = pyr(500, 128);
+        for py in (0..128).step_by(17) {
+            for px in (0..128).step_by(13) {
+                assert_eq!(p.count_at(0, px, py), g.count_at(px, py) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn suggest_r0_tracks_density() {
+        // dense uniform data → small suggested radius; tiny data → larger
+        let (_, dense) = pyr(50_000, 512);
+        let (_, sparse) = pyr(100, 512);
+        let rd = dense.suggest_r0(11, 256, 256);
+        let rs = sparse.suggest_r0(11, 256, 256);
+        assert!(rd < rs, "dense={rd} sparse={rs}");
+        assert!(rd >= 1);
+    }
+
+    #[test]
+    fn density_positive_on_uniform() {
+        let (_, p) = pyr(10_000, 256);
+        let d = p.local_density(p.num_levels() / 2, 128, 128);
+        assert!(d > 0.0);
+        // uniform 10k over 256² ≈ 0.15 pts/pixel
+        assert!((d - 10_000.0 / (256.0 * 256.0)).abs() < 0.1, "d={d}");
+    }
+}

@@ -1,0 +1,271 @@
+//! 3-D volume index — the paper's §3 higher-dimension sketch, built.
+//!
+//! "This approach can be applied to higher dimensional data, though it
+//! will require a much bigger memory (or disk) space." A `R³` voxel
+//! count volume with per-(z,y)-row prefix sums: the O(R^d) memory cost
+//! the paper warns about is real ([`VolumeGrid::memory_bytes`]
+//! quantifies it — that warning becomes the EXT-3D bench), while ball
+//! counts stay O(r²) rows via the prefix table.
+
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+
+/// Voxelized 3-D count volume with point buckets.
+#[derive(Debug, Clone)]
+pub struct VolumeGrid {
+    resolution: usize,
+    mins: [f64; 3],
+    scale: [f64; 3],
+    /// Voxel counts, `[z][y][x]` row-major.
+    total: Vec<u16>,
+    /// Per-(z,y)-row prefix sums: `prefix[(z*R+y)*(R+1)+x]`.
+    row_prefix: Vec<u32>,
+    /// `(voxel, point_id)` sorted by voxel.
+    cell_points: Vec<(u32, u32)>,
+    labels: Vec<u16>,
+    num_classes: usize,
+    n_points: usize,
+}
+
+impl VolumeGrid {
+    /// Voxelize a 3-D dataset. Resolution is capped at 512 (a u32 cell
+    /// index must hold R³, and memory is already ~0.5 GiB there —
+    /// exactly the paper's caveat).
+    pub fn build(ds: &Dataset, resolution: usize) -> Result<Self> {
+        if ds.dim != 3 {
+            return Err(AsnnError::Grid(format!(
+                "VolumeGrid requires dim == 3 (got {})",
+                ds.dim
+            )));
+        }
+        if !(8..=512).contains(&resolution) {
+            return Err(AsnnError::Grid("volume resolution must be in [8, 512]".into()));
+        }
+        if ds.is_empty() {
+            return Err(AsnnError::Grid("cannot voxelize an empty dataset".into()));
+        }
+        let (mins_v, maxs_v) = ds.bounds();
+        let r = resolution;
+        let mut mins = [0.0; 3];
+        let mut scale = [0.0; 3];
+        for d in 0..3 {
+            let extent = (maxs_v[d] - mins_v[d]).max(f64::MIN_POSITIVE);
+            mins[d] = mins_v[d];
+            scale[d] = r as f64 / extent;
+        }
+        let mut total = vec![0u16; r * r * r];
+        let mut cell_points = Vec::with_capacity(ds.len());
+        let this = |p: &[f64], d: usize| -> u32 {
+            (((p[d] - mins[d]) * scale[d]).floor()).clamp(0.0, (r - 1) as f64) as u32
+        };
+        for i in 0..ds.len() {
+            let p = ds.point(i);
+            let (px, py, pz) = (this(p, 0), this(p, 1), this(p, 2));
+            let cell = (pz * r as u32 + py) * r as u32 + px;
+            total[cell as usize] = total[cell as usize].saturating_add(1);
+            cell_points.push((cell, i as u32));
+        }
+        cell_points.sort_unstable();
+        let mut row_prefix = vec![0u32; r * r * (r + 1)];
+        for zy in 0..r * r {
+            let mut acc = 0u32;
+            let base = zy * (r + 1);
+            for x in 0..r {
+                acc += total[zy * r + x] as u32;
+                row_prefix[base + x + 1] = acc;
+            }
+        }
+        Ok(Self {
+            resolution: r,
+            mins,
+            scale,
+            total,
+            row_prefix,
+            cell_points,
+            labels: ds.labels.clone(),
+            num_classes: ds.num_classes,
+            n_points: ds.len(),
+        })
+    }
+
+    pub fn resolution(&self) -> usize {
+        self.resolution
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.n_points
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Voxel of a data-space point (clamped to the volume).
+    pub fn voxel_of(&self, p: &[f64]) -> (u32, u32, u32) {
+        let r = self.resolution;
+        let f = |d: usize| -> u32 {
+            (((p[d] - self.mins[d]) * self.scale[d]).floor()).clamp(0.0, (r - 1) as f64) as u32
+        };
+        (f(0), f(1), f(2))
+    }
+
+    #[inline]
+    fn row_count(&self, z: u32, y: u32, x0: u32, x1: u32) -> u32 {
+        let r = self.resolution;
+        let base = (z as usize * r + y as usize) * (r + 1);
+        self.row_prefix[base + x1 as usize + 1] - self.row_prefix[base + x0 as usize]
+    }
+
+    /// Count points inside the L2 ball of radius `rad` voxels centered
+    /// at `(cx, cy, cz)`: O(r²) prefix lookups.
+    pub fn count_in_ball(&self, cx: u32, cy: u32, cz: u32, rad: u32) -> u64 {
+        let res = self.resolution as i64;
+        let (cx, cy, cz) = (cx as i64, cy as i64, cz as i64);
+        let rad = rad as i64;
+        let mut total = 0u64;
+        for dz in (-rad).max(-cz)..=rad.min(res - 1 - cz) {
+            let rem_z = rad * rad - dz * dz;
+            let ry = (rem_z as f64).sqrt().floor() as i64;
+            for dy in (-ry).max(-cy)..=ry.min(res - 1 - cy) {
+                let rem = rem_z - dy * dy;
+                if rem < 0 {
+                    continue;
+                }
+                let half = (rem as f64).sqrt().floor() as i64;
+                let x0 = (cx - half).max(0);
+                let x1 = (cx + half).min(res - 1);
+                if x0 > x1 {
+                    continue;
+                }
+                total +=
+                    self.row_count((cz + dz) as u32, (cy + dy) as u32, x0 as u32, x1 as u32)
+                        as u64;
+            }
+        }
+        total
+    }
+
+    /// Point ids (with labels) inside the ball, via bucket ranges.
+    pub fn collect_in_ball(&self, cx: u32, cy: u32, cz: u32, rad: u32) -> Vec<(u32, u16)> {
+        let res = self.resolution as i64;
+        let (cxi, cyi, czi) = (cx as i64, cy as i64, cz as i64);
+        let rad = rad as i64;
+        let mut out = Vec::new();
+        for dz in (-rad).max(-czi)..=rad.min(res - 1 - czi) {
+            let rem_z = rad * rad - dz * dz;
+            let ry = (rem_z as f64).sqrt().floor() as i64;
+            for dy in (-ry).max(-cyi)..=ry.min(res - 1 - cyi) {
+                let rem = rem_z - dy * dy;
+                if rem < 0 {
+                    continue;
+                }
+                let half = (rem as f64).sqrt().floor() as i64;
+                let x0 = (cxi - half).max(0);
+                let x1 = (cxi + half).min(res - 1);
+                if x0 > x1 {
+                    continue;
+                }
+                let row_base = ((czi + dz) * res + (cyi + dy)) as u32 * res as u32;
+                let lo = self
+                    .cell_points
+                    .partition_point(|&(c, _)| c < row_base + x0 as u32);
+                let hi = self
+                    .cell_points
+                    .partition_point(|&(c, _)| c <= row_base + x1 as u32);
+                for &(_, pid) in &self.cell_points[lo..hi] {
+                    out.push((pid, self.labels[pid as usize]));
+                }
+            }
+        }
+        out
+    }
+
+    /// Index memory in bytes — the paper's O(R^d) warning, measured.
+    pub fn memory_bytes(&self) -> usize {
+        self.total.len() * 2
+            + self.row_prefix.len() * 4
+            + self.cell_points.len() * 8
+            + self.labels.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::data::Dataset;
+
+    fn ds3(n: usize, seed: u64) -> Dataset {
+        let mut spec = SyntheticSpec::paper_default(n, seed);
+        spec.dim = 3;
+        generate(&spec)
+    }
+
+    #[test]
+    fn counts_conserved() {
+        let ds = ds3(5000, 21);
+        let v = VolumeGrid::build(&ds, 64).unwrap();
+        let all = v.count_in_ball(32, 32, 32, 200);
+        assert_eq!(all, 5000);
+    }
+
+    #[test]
+    fn ball_count_matches_direct() {
+        let ds = ds3(2000, 22);
+        let v = VolumeGrid::build(&ds, 48).unwrap();
+        let (cx, cy, cz, rad) = (24u32, 24u32, 24u32, 10u32);
+        // direct: voxelize each point, test voxel distance
+        let mut want = 0u64;
+        for i in 0..ds.len() {
+            let (px, py, pz) = v.voxel_of(ds.point(i));
+            let dx = px as i64 - cx as i64;
+            let dy = py as i64 - cy as i64;
+            let dz = pz as i64 - cz as i64;
+            if dx * dx + dy * dy + dz * dz <= (rad * rad) as i64 {
+                want += 1;
+            }
+        }
+        assert_eq!(v.count_in_ball(cx, cy, cz, rad), want);
+    }
+
+    #[test]
+    fn collect_matches_count() {
+        let ds = ds3(3000, 23);
+        let v = VolumeGrid::build(&ds, 64).unwrap();
+        for &(c, rad) in &[(32u32, 8u32), (5, 20), (60, 15)] {
+            let n = v.count_in_ball(c, c, c, rad);
+            let got = v.collect_in_ball(c, c, c, rad);
+            assert_eq!(got.len() as u64, n);
+        }
+    }
+
+    #[test]
+    fn monotone_in_radius() {
+        let ds = ds3(4000, 24);
+        let v = VolumeGrid::build(&ds, 64).unwrap();
+        let mut last = 0;
+        for rad in (0..60).step_by(4) {
+            let n = v.count_in_ball(32, 32, 32, rad);
+            assert!(n >= last);
+            last = n;
+        }
+    }
+
+    #[test]
+    fn memory_grows_cubically() {
+        let ds = ds3(1000, 25);
+        let small = VolumeGrid::build(&ds, 32).unwrap().memory_bytes();
+        let big = VolumeGrid::build(&ds, 128).unwrap().memory_bytes();
+        // 4× resolution → ~64× memory (paper's warning)
+        assert!(big > small * 30, "small={small} big={big}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let ds2 = generate(&SyntheticSpec::paper_default(100, 26));
+        assert!(VolumeGrid::build(&ds2, 64).is_err()); // dim 2
+        let ds = ds3(100, 27);
+        assert!(VolumeGrid::build(&ds, 4).is_err());
+        assert!(VolumeGrid::build(&ds, 1024).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! `asnn` — Active Search for Nearest Neighbors.
+//!
+//! Reproduction of Um & Choi, *Active Search for Nearest Neighbors*
+//! (cs.LG 2019) as a three-layer serving library:
+//!
+//! - **L3 (this crate)**: coordinator — grid index, engines, router,
+//!   batcher, TCP server, metrics, CLI.
+//! - **L2/L1 (python/, build-time only)**: JAX model + Pallas kernels,
+//!   AOT-lowered to HLO text in `artifacts/`, executed from
+//!   [`runtime`] via the PJRT CPU client.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use asnn::data::synthetic::{SyntheticSpec, generate};
+//! use asnn::grid::MultiGrid;
+//! use asnn::engine::{NnEngine, active::ActiveEngine, brute::BruteEngine};
+//!
+//! let ds = generate(&SyntheticSpec::paper_default(10_000, 42));
+//! let grid = MultiGrid::build(&ds, 3000).unwrap();
+//! let engine = ActiveEngine::from_grid(grid, Default::default());
+//! let hits = engine.knn(&[0.5, 0.5], 11).unwrap();
+//! assert_eq!(hits.len(), 11);
+//! ```
+
+pub mod active;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod error;
+pub mod grid;
+pub mod runtime;
+pub mod util;
+pub mod viz;
+
+pub use error::{AsnnError, Result};

@@ -1,0 +1,324 @@
+//! `asnn` CLI — launcher for the active-search serving stack.
+//!
+//! ```text
+//! asnn gen-data  --n 10000 --family uniform --out data.bin
+//! asnn info      --config asnn.toml
+//! asnn query     --n 10000 --k 11 --x 0.5 --y 0.5 --engine active
+//! asnn classify  --n 30000 --queries 100 --engine active
+//! asnn serve     --config asnn.toml [--artifacts artifacts]
+//! asnn viz       fig1 fig2 --out out
+//! asnn bench     fig3|accuracy (thin wrappers; full runs via cargo bench)
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use asnn::config::{AsnnConfig, EngineKind, Metric, R0Policy, SearchMode};
+use asnn::coordinator::{Metrics, Router, Server};
+use asnn::data::synthetic::{generate, generate_queries, Family, SyntheticSpec};
+use asnn::data::{io as dio, Dataset};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::active_pjrt::ActivePjrtEngine;
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::kdtree::KdTreeEngine;
+use asnn::engine::lsh::{LshEngine, LshParams};
+use asnn::engine::NnEngine;
+use asnn::error::{AsnnError, Result};
+use asnn::grid::MultiGrid;
+use asnn::runtime::RuntimeService;
+use asnn::util::cli::Args;
+use asnn::util::timer::Timer;
+use asnn::viz;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("asnn: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("gen-data") => cmd_gen_data(args),
+        Some("info") => cmd_info(args),
+        Some("query") => cmd_query(args),
+        Some("classify") => cmd_classify(args),
+        Some("serve") => cmd_serve(args),
+        Some("viz") => cmd_viz(args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => Err(AsnnError::Config(format!(
+            "unknown subcommand {other:?} (try `asnn help`)"
+        ))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "asnn — Active Search for Nearest Neighbors (Um & Choi 2019)\n\
+         subcommands:\n  \
+         gen-data --n N [--family uniform|blobs|rings] [--classes C] [--seed S] --out FILE[.csv]\n  \
+         info     [--config FILE]\n  \
+         query    [--config FILE] [--data FILE] --x X --y Y [--k K] [--engine E]\n  \
+         classify [--config FILE] [--queries Q] [--engine E]\n  \
+         serve    [--config FILE] [--artifacts DIR]\n  \
+         viz      fig1 fig2 [--out DIR]\n\
+         engines: brute kdtree lsh active active-pjrt"
+    );
+}
+
+/// Load config (defaults if --config absent), with CLI overrides.
+fn load_config(args: &Args) -> Result<AsnnConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => AsnnConfig::load(Path::new(path))?,
+        None => AsnnConfig::default(),
+    };
+    cfg.data.n = args.get_usize("n", cfg.data.n)?;
+    cfg.data.seed = args.get_u64("seed", cfg.data.seed)?;
+    if let Some(f) = args.get("family") {
+        cfg.data.family = Family::parse(f)
+            .ok_or_else(|| AsnnError::Config(format!("unknown family {f:?}")))?;
+    }
+    cfg.data.num_classes = args.get_usize("classes", cfg.data.num_classes)?;
+    cfg.grid.resolution = args.get_usize("resolution", cfg.grid.resolution)?;
+    cfg.search.k = args.get_usize("k", cfg.search.k)?;
+    cfg.search.r0 = args.get_u64("r0", cfg.search.r0 as u64)? as u32;
+    if let Some(m) = args.get("metric") {
+        cfg.search.metric = Metric::parse(m)
+            .ok_or_else(|| AsnnError::Config(format!("unknown metric {m:?}")))?;
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.search.mode = SearchMode::parse(m)
+            .ok_or_else(|| AsnnError::Config(format!("unknown mode {m:?}")))?;
+    }
+    if let Some(p) = args.get("r0-policy") {
+        cfg.search.r0_policy = R0Policy::parse(p)
+            .ok_or_else(|| AsnnError::Config(format!("unknown r0 policy {p:?}")))?;
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineKind::parse(e)
+            .ok_or_else(|| AsnnError::Config(format!("unknown engine {e:?}")))?;
+    }
+    if let Some(dir) = args.get("artifacts") {
+        cfg.runtime.artifacts_dir = dir.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Dataset from --data file or synthesized per config.
+fn load_dataset(args: &Args, cfg: &AsnnConfig) -> Result<Arc<Dataset>> {
+    if let Some(path) = args.get("data") {
+        let p = Path::new(path);
+        let ds = if path.ends_with(".csv") { dio::load_csv(p)? } else { dio::load_bin(p)? };
+        Ok(Arc::new(ds))
+    } else {
+        Ok(Arc::new(generate(&SyntheticSpec {
+            family: cfg.data.family,
+            n: cfg.data.n,
+            dim: cfg.data.dim,
+            num_classes: cfg.data.num_classes,
+            seed: cfg.data.seed,
+            blob_std: 0.06,
+        })))
+    }
+}
+
+fn active_params(cfg: &AsnnConfig) -> ActiveParams {
+    ActiveParams {
+        r0: cfg.search.r0,
+        max_iters: cfg.search.max_iters,
+        metric: cfg.search.metric,
+        mode: cfg.search.mode,
+        r0_policy: cfg.search.r0_policy,
+        tolerance: cfg.search.tolerance,
+    }
+}
+
+/// Build one engine per config kind.
+fn build_engine(cfg: &AsnnConfig, ds: Arc<Dataset>) -> Result<Arc<dyn NnEngine>> {
+    Ok(match cfg.engine {
+        EngineKind::Brute => Arc::new(BruteEngine::new(ds)),
+        EngineKind::KdTree => Arc::new(KdTreeEngine::build(ds)),
+        EngineKind::Lsh => Arc::new(LshEngine::build(ds, LshParams::default())),
+        EngineKind::Active => {
+            Arc::new(ActiveEngine::new(ds, cfg.grid.resolution, active_params(cfg))?)
+        }
+        EngineKind::ActivePjrt => {
+            let service = RuntimeService::spawn(Path::new(&cfg.runtime.artifacts_dir).into())?;
+            Arc::new(ActivePjrtEngine::new(ds, cfg.grid.resolution, active_params(cfg), service)?)
+        }
+    })
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out = args.require("out")?;
+    let ds = generate(&SyntheticSpec {
+        family: cfg.data.family,
+        n: cfg.data.n,
+        dim: cfg.data.dim,
+        num_classes: cfg.data.num_classes,
+        seed: cfg.data.seed,
+        blob_std: 0.06,
+    });
+    let path = Path::new(out);
+    if out.ends_with(".csv") {
+        dio::save_csv(&ds, path)?;
+    } else {
+        dio::save_bin(&ds, path)?;
+    }
+    println!(
+        "wrote {} points ({} classes, dim {}) to {}",
+        ds.len(),
+        ds.num_classes,
+        ds.dim,
+        out
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ds = load_dataset(args, &cfg)?;
+    let t = Timer::new();
+    let grid = MultiGrid::build(&ds, cfg.grid.resolution)?;
+    println!("dataset: n={} dim={} classes={}", ds.len(), ds.dim, ds.num_classes);
+    println!(
+        "grid: {0}x{0} build={1:.3}s mem={2:.1} MiB occupied={3} overlap={4:.4}",
+        cfg.grid.resolution,
+        t.elapsed_secs(),
+        grid.memory_bytes() as f64 / (1024.0 * 1024.0),
+        grid.occupied_cells(),
+        grid.overlap_fraction()
+    );
+    println!(
+        "search: k={} r0={} metric={} engine={}",
+        cfg.search.k,
+        cfg.search.r0,
+        cfg.search.metric.name(),
+        cfg.engine.name()
+    );
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let x = args.get_f64("x", f64::NAN)?;
+    let y = args.get_f64("y", f64::NAN)?;
+    if !x.is_finite() || !y.is_finite() {
+        return Err(AsnnError::Config("query needs --x and --y".into()));
+    }
+    let ds = load_dataset(args, &cfg)?;
+    let engine = build_engine(&cfg, ds)?;
+    let t = Timer::new();
+    let hits = engine.knn(&[x, y], cfg.search.k)?;
+    let dt = t.elapsed_secs();
+    println!("engine={} k={} elapsed={:.6}s", engine.name(), cfg.search.k, dt);
+    for h in hits {
+        println!("  id={} dist={:.6} label={}", h.id, h.dist, h.label);
+    }
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n_queries = args.get_usize("queries", 100)?;
+    let ds = load_dataset(args, &cfg)?;
+    let engine = build_engine(&cfg, ds.clone())?;
+    let truth = BruteEngine::new(ds);
+    let queries = generate_queries(n_queries, 2, cfg.data.seed + 1);
+    let t = Timer::new();
+    let mut agree = 0usize;
+    for q in &queries {
+        let a = engine.classify(q, cfg.search.k)?;
+        let b = truth.classify(q, cfg.search.k)?;
+        if a == b {
+            agree += 1;
+        }
+    }
+    println!(
+        "engine={} queries={} agreement={:.1}% elapsed={:.3}s",
+        engine.name(),
+        n_queries,
+        100.0 * agree as f64 / n_queries as f64,
+        t.elapsed_secs()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ds = load_dataset(args, &cfg)?;
+    let metrics = Arc::new(Metrics::new());
+    let mut router = Router::new(cfg.engine.name(), metrics);
+    // always register the cheap engines; PJRT only when artifacts exist
+    router.register("brute", Arc::new(BruteEngine::new(ds.clone())));
+    router.register("kdtree", Arc::new(KdTreeEngine::build(ds.clone())));
+    router.register("lsh", Arc::new(LshEngine::build(ds.clone(), LshParams::default())));
+    router.register(
+        "active",
+        Arc::new(ActiveEngine::new(ds.clone(), cfg.grid.resolution, active_params(&cfg))?),
+    );
+    let artifacts = Path::new(&cfg.runtime.artifacts_dir);
+    if artifacts.join("manifest.toml").exists() {
+        let service = RuntimeService::spawn(artifacts.into())?;
+        router.register(
+            "active-pjrt",
+            Arc::new(ActivePjrtEngine::new(
+                ds,
+                cfg.grid.resolution,
+                active_params(&cfg),
+                service,
+            )?),
+        );
+        println!("loaded PJRT artifacts from {}", artifacts.display());
+    } else {
+        println!("no artifacts at {} — PJRT engine disabled", artifacts.display());
+    }
+    let server = Server::new(Arc::new(router), cfg.server.workers);
+    let handle = server.spawn(&cfg.server.addr)?;
+    println!("serving on {} (engines ready; Ctrl-C to stop)", handle.addr);
+    // block forever (no signal handling crates offline; Ctrl-C kills us)
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_viz(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out_dir = Path::new(args.get_or("out", "out"));
+    let want = |name: &str| args.positionals.is_empty() || args.positionals.iter().any(|p| p == name);
+    if want("fig1") {
+        // the paper's 15-point illustration
+        let ds = generate(&SyntheticSpec::blobs(15, 3, cfg.data.seed));
+        let scatter = viz::render_scatter(&ds, 600, 4)?;
+        scatter.save_ppm(&out_dir.join("fig1_vectors.ppm"))?;
+        let grid = MultiGrid::build(&ds, 600)?;
+        let image = viz::render_grid(&grid, 4);
+        image.save_ppm(&out_dir.join("fig1_image.ppm"))?;
+        println!("wrote fig1_vectors.ppm fig1_image.ppm to {}", out_dir.display());
+    }
+    if want("fig2") {
+        let ds = Arc::new(generate(&SyntheticSpec::blobs(400, 3, cfg.data.seed + 2)));
+        let engine = ActiveEngine::new(ds.clone(), 600, active_params(&cfg))?;
+        let q = [0.45, 0.55];
+        let circle = engine.search(&q, cfg.search.k)?;
+        let img = viz::render_trace(engine.grid(), (circle.cx, circle.cy), &circle.trace, 2);
+        img.save_ppm(&out_dir.join("fig2_trace.ppm"))?;
+        println!(
+            "wrote fig2_trace.ppm ({} iterations, final r={}) to {}",
+            circle.trace.iterations(),
+            circle.r,
+            out_dir.display()
+        );
+    }
+    Ok(())
+}

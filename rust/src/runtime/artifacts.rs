@@ -1,0 +1,207 @@
+//! Artifact registry: compile every manifest entry once, expose typed
+//! call wrappers for each computation family.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::{execute_tuple, literal_f32, scalar_f32, to_vec_f32, to_vec_i32, PjrtRuntime};
+use crate::error::{AsnnError, Result};
+
+/// One compiled artifact plus its metadata.
+pub struct CompiledArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Output of a `disk_count` call for one query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiskCountOut {
+    /// Per-class point counts inside the circle.
+    pub class_counts: Vec<f32>,
+    /// Total count (sum of class counts, computed in-graph).
+    pub total: f32,
+    /// Eq. 1 next radius, computed in-graph.
+    pub next_r: f32,
+}
+
+/// Output of a `neighbor_scan` call: top-K occupied pixels by distance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NeighborScanOut {
+    /// Pixel-space distance per hit (L2: squared; +inf padding for
+    /// absent hits).
+    pub dists: Vec<f32>,
+    /// Flattened window pixel index per hit (-1 padding).
+    pub indices: Vec<i32>,
+}
+
+/// Output of a `knn_chunk` call: per-query top-K over one point chunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KnnChunkOut {
+    /// `[batch × k_max]` squared distances (+inf padding).
+    pub dists: Vec<f32>,
+    /// `[batch × k_max]` point indices within the chunk (-1 padding).
+    pub indices: Vec<i32>,
+}
+
+impl CompiledArtifact {
+    /// Call a `disk_count` artifact (batch 1). `window` is `[C, W, W]`
+    /// row-major; the circle center is the window center.
+    pub fn disk_count(&self, window: &[f32], r: f32, k: f32, metric_l1: bool) -> Result<DiskCountOut> {
+        let m = &self.meta;
+        if m.kind != "disk_count" || m.batch != 1 {
+            return Err(AsnnError::Runtime(format!(
+                "{} is not a batch-1 disk_count artifact",
+                m.name
+            )));
+        }
+        let w = m.window as i64;
+        let c = m.classes as i64;
+        let win = literal_f32(window, &[c, w, w])?;
+        let outs = execute_tuple(
+            &self.exe,
+            &[win, scalar_f32(r), scalar_f32(k), scalar_f32(if metric_l1 { 1.0 } else { 0.0 })],
+        )?;
+        if outs.len() != 3 {
+            return Err(AsnnError::Runtime(format!(
+                "disk_count returned {} outputs, expected 3",
+                outs.len()
+            )));
+        }
+        Ok(DiskCountOut {
+            class_counts: to_vec_f32(&outs[0])?,
+            total: to_vec_f32(&outs[1])?[0],
+            next_r: to_vec_f32(&outs[2])?[0],
+        })
+    }
+
+    /// Call a batched `disk_count` artifact: `windows` is `[B, C, W, W]`,
+    /// `rs` is `[B]`. Returns per-query outputs.
+    pub fn disk_count_batch(
+        &self,
+        windows: &[f32],
+        rs: &[f32],
+        k: f32,
+        metric_l1: bool,
+    ) -> Result<Vec<DiskCountOut>> {
+        let m = &self.meta;
+        if m.kind != "disk_count" {
+            return Err(AsnnError::Runtime(format!("{} is not disk_count", m.name)));
+        }
+        let (b, c, w) = (m.batch as i64, m.classes as i64, m.window as i64);
+        if rs.len() != m.batch {
+            return Err(AsnnError::Runtime(format!(
+                "batch artifact {} expects {} radii, got {}",
+                m.name,
+                m.batch,
+                rs.len()
+            )));
+        }
+        let win = literal_f32(windows, &[b, c, w, w])?;
+        let rlit = literal_f32(rs, &[b])?;
+        let outs = execute_tuple(
+            &self.exe,
+            &[win, rlit, scalar_f32(k), scalar_f32(if metric_l1 { 1.0 } else { 0.0 })],
+        )?;
+        let class_counts = to_vec_f32(&outs[0])?; // [B, C]
+        let totals = to_vec_f32(&outs[1])?; // [B]
+        let next_rs = to_vec_f32(&outs[2])?; // [B]
+        Ok((0..m.batch)
+            .map(|i| DiskCountOut {
+                class_counts: class_counts[i * m.classes..(i + 1) * m.classes].to_vec(),
+                total: totals[i],
+                next_r: next_rs[i],
+            })
+            .collect())
+    }
+
+    /// Call a `neighbor_scan` artifact: total-count window `[W, W]`,
+    /// radius, metric flag → top-K occupied pixels.
+    pub fn neighbor_scan(&self, window: &[f32], r: f32, metric_l1: bool) -> Result<NeighborScanOut> {
+        let m = &self.meta;
+        if m.kind != "neighbor_scan" {
+            return Err(AsnnError::Runtime(format!("{} is not neighbor_scan", m.name)));
+        }
+        let w = m.window as i64;
+        let win = literal_f32(window, &[w, w])?;
+        let outs = execute_tuple(
+            &self.exe,
+            &[win, scalar_f32(r), scalar_f32(if metric_l1 { 1.0 } else { 0.0 })],
+        )?;
+        Ok(NeighborScanOut { dists: to_vec_f32(&outs[0])?, indices: to_vec_i32(&outs[1])? })
+    }
+
+    /// Call a `knn_chunk` artifact: queries `[B, 2]`, chunk `[N, 2]`,
+    /// `valid` = live prefix length of the chunk (rest is padding).
+    pub fn knn_chunk(&self, queries: &[f32], chunk: &[f32], valid: usize) -> Result<KnnChunkOut> {
+        let m = &self.meta;
+        if m.kind != "knn_chunk" {
+            return Err(AsnnError::Runtime(format!("{} is not knn_chunk", m.name)));
+        }
+        let q = literal_f32(queries, &[m.batch as i64, 2])?;
+        let c = literal_f32(chunk, &[m.chunk as i64, 2])?;
+        let outs = execute_tuple(&self.exe, &[q, c, scalar_f32(valid as f32)])?;
+        Ok(KnnChunkOut { dists: to_vec_f32(&outs[0])?, indices: to_vec_i32(&outs[1])? })
+    }
+}
+
+/// All compiled artifacts, keyed by manifest name.
+pub struct ArtifactRegistry {
+    pub manifest: Manifest,
+    map: HashMap<String, CompiledArtifact>,
+}
+
+impl ArtifactRegistry {
+    /// Compile every manifest entry (one-time cost at startup).
+    pub fn load(rt: &PjrtRuntime, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let mut map = HashMap::new();
+        for meta in manifest.iter() {
+            let path = manifest.path_of(meta);
+            let exe = rt.compile_file(&path).map_err(|e| {
+                AsnnError::Runtime(format!("compiling {}: {e}", path.display()))
+            })?;
+            map.insert(meta.name.clone(), CompiledArtifact { meta: meta.clone(), exe });
+        }
+        Ok(Self { manifest, map })
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&CompiledArtifact> {
+        self.map.get(name)
+    }
+
+    /// The disk_count artifact for a given window size and batch.
+    pub fn disk_count_for(&self, window: usize, batch: usize) -> Option<&CompiledArtifact> {
+        self.get(&format!("disk_count_w{window}_b{batch}"))
+    }
+
+    /// The neighbor_scan artifact for a window size.
+    pub fn neighbor_scan_for(&self, window: usize) -> Option<&CompiledArtifact> {
+        self.get(&format!("neighbor_scan_w{window}"))
+    }
+
+    /// The knn_chunk artifact for a batch size.
+    pub fn knn_chunk_for(&self, batch: usize) -> Option<&CompiledArtifact> {
+        self.get(&format!("knn_chunk_b{batch}"))
+    }
+
+    /// Window sizes available for batch-1 disk_count, ascending.
+    pub fn disk_count_windows(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .map
+            .values()
+            .filter(|a| a.meta.kind == "disk_count" && a.meta.batch == 1)
+            .map(|a| a.meta.window)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}

@@ -1,0 +1,189 @@
+//! Artifact manifest: `artifacts/manifest.toml`, written by
+//! `python/compile/aot.py` and parsed with the in-repo TOML subset.
+//!
+//! One section per artifact:
+//!
+//! ```toml
+//! [disk_count_w64_b1]
+//! kind = "disk_count"
+//! file = "disk_count_w64_b1.hlo.txt"
+//! window = 64
+//! batch = 1
+//! classes = 3
+//! k_max = 32
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{AsnnError, Result};
+use crate::util::toml::Document;
+
+/// Metadata for one AOT artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Computation family: `disk_count`, `neighbor_scan`, `knn_chunk`.
+    pub kind: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Static window side (0 when not applicable).
+    pub window: usize,
+    /// Static batch size.
+    pub batch: usize,
+    /// Number of class channels baked into the shapes.
+    pub classes: usize,
+    /// Static top-k width (0 when not applicable).
+    pub k_max: usize,
+    /// Static chunk length for `knn_chunk` (0 otherwise).
+    pub chunk: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.toml`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            AsnnError::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let doc = Document::parse(text)?;
+        let mut entries = BTreeMap::new();
+        for name in doc.sections() {
+            if name.is_empty() {
+                continue; // top-level keys (e.g. generator version) ignored
+            }
+            let kind = doc.str_or(name, "kind", "");
+            let file = doc.str_or(name, "file", "");
+            if kind.is_empty() || file.is_empty() {
+                return Err(AsnnError::Runtime(format!(
+                    "manifest entry {name:?} missing kind/file"
+                )));
+            }
+            entries.insert(
+                name.to_string(),
+                ArtifactMeta {
+                    name: name.to_string(),
+                    kind,
+                    file,
+                    window: doc.int_or(name, "window", 0) as usize,
+                    batch: doc.int_or(name, "batch", 1) as usize,
+                    classes: doc.int_or(name, "classes", 0) as usize,
+                    k_max: doc.int_or(name, "k_max", 0) as usize,
+                    chunk: doc.int_or(name, "chunk", 0) as usize,
+                },
+            );
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.entries.values()
+    }
+
+    /// All entries of a kind, sorted by (window, batch).
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> =
+            self.entries.values().filter(|m| m.kind == kind).collect();
+        v.sort_by_key(|m| (m.window, m.batch));
+        v
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        version = 1
+        [disk_count_w64_b1]
+        kind = "disk_count"
+        file = "disk_count_w64_b1.hlo.txt"
+        window = 64
+        batch = 1
+        classes = 3
+        [disk_count_w128_b1]
+        kind = "disk_count"
+        file = "disk_count_w128_b1.hlo.txt"
+        window = 128
+        batch = 1
+        classes = 3
+        [knn_chunk_b16]
+        kind = "knn_chunk"
+        file = "knn_chunk_b16.hlo.txt"
+        batch = 16
+        chunk = 4096
+        k_max = 32
+    "#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        let e = m.get("disk_count_w64_b1").unwrap();
+        assert_eq!(e.kind, "disk_count");
+        assert_eq!(e.window, 64);
+        assert_eq!(e.classes, 3);
+        assert_eq!(e.batch, 1);
+    }
+
+    #[test]
+    fn of_kind_sorted_by_window() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let dc = m.of_kind("disk_count");
+        assert_eq!(dc.len(), 2);
+        assert!(dc[0].window < dc[1].window);
+    }
+
+    #[test]
+    fn path_joins_dir() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let e = m.get("knn_chunk_b16").unwrap();
+        assert_eq!(m.path_of(e), Path::new("/tmp/a/knn_chunk_b16.hlo.txt"));
+        assert_eq!(e.chunk, 4096);
+        assert_eq!(e.k_max, 32);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let bad = "[x]\nwindow = 3";
+        assert!(Manifest::parse(Path::new("/tmp"), bad).is_err());
+    }
+
+    #[test]
+    fn top_level_keys_ignored() {
+        let m = Manifest::parse(Path::new("/tmp"), "version = 2").unwrap();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,103 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the rust hot path.
+//!
+//! `python/compile/aot.py` lowers the L2 jax model (which calls the L1
+//! Pallas kernels) to **HLO text** — the interchange format that
+//! round-trips through xla_extension 0.5.1 (serialized jax ≥ 0.5
+//! protos carry 64-bit instruction ids it rejects). This module wraps
+//! the `xla` crate: CPU PJRT client → `HloModuleProto::from_text_file`
+//! → compile once → typed execute helpers.
+
+pub mod artifacts;
+pub mod manifest;
+pub mod service;
+
+pub use artifacts::{ArtifactRegistry, CompiledArtifact};
+pub use manifest::{ArtifactMeta, Manifest};
+pub use service::RuntimeService;
+
+use std::path::Path;
+
+use crate::error::{AsnnError, Result};
+
+/// Convert an `xla` crate error into our runtime error domain.
+pub(crate) fn xla_err(e: xla::Error) -> AsnnError {
+    AsnnError::Runtime(format!("{e:?}"))
+}
+
+/// Owning wrapper around the PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client (the only backend in this testbed; the
+    /// same artifacts compile on TPU PJRT plugins when the kernels are
+    /// lowered without `interpret=True` — see DESIGN.md).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xla_err)?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text file.
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| AsnnError::Runtime(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(xla_err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(xla_err)
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.toml`.
+    pub fn load_registry(&self, dir: &Path) -> Result<ArtifactRegistry> {
+        ArtifactRegistry::load(self, dir)
+    }
+}
+
+/// Execute a compiled module lowered with `return_tuple=True` and
+/// return the un-tupled output literals.
+pub fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(inputs).map_err(xla_err)?;
+    let buf = result
+        .first()
+        .and_then(|d| d.first())
+        .ok_or_else(|| AsnnError::Runtime("executable returned no buffers".into()))?;
+    let lit = buf.to_literal_sync().map_err(xla_err)?;
+    lit.to_tuple().map_err(xla_err)
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect as usize != data.len() {
+        return Err(AsnnError::Runtime(format!(
+            "literal shape {dims:?} needs {expect} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(xla_err)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read an f32 output literal into a Vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(xla_err)
+}
+
+/// Read an i32 output literal into a Vec.
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(xla_err)
+}

@@ -1,0 +1,229 @@
+//! Runtime service thread: the PJRT client and compiled executables are
+//! not `Send` (the `xla` crate wraps raw PJRT pointers in `Rc`), so one
+//! dedicated thread owns them and serves execution requests over a
+//! channel — the same single-runtime-thread-per-device shape real
+//! serving systems use. [`RuntimeService`] handles are `Clone + Send +
+//! Sync` and can sit inside any engine.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+use super::artifacts::{DiskCountOut, KnnChunkOut, NeighborScanOut};
+use super::manifest::ArtifactMeta;
+use super::PjrtRuntime;
+use crate::error::{AsnnError, Result};
+
+enum Job {
+    DiskCount {
+        artifact: String,
+        window: Vec<f32>,
+        r: f32,
+        k: f32,
+        metric_l1: bool,
+        reply: Sender<Result<DiskCountOut>>,
+    },
+    DiskCountBatch {
+        artifact: String,
+        windows: Vec<f32>,
+        rs: Vec<f32>,
+        k: f32,
+        metric_l1: bool,
+        reply: Sender<Result<Vec<DiskCountOut>>>,
+    },
+    NeighborScan {
+        artifact: String,
+        window: Vec<f32>,
+        r: f32,
+        metric_l1: bool,
+        reply: Sender<Result<NeighborScanOut>>,
+    },
+    KnnChunk {
+        artifact: String,
+        queries: Vec<f32>,
+        chunk: Vec<f32>,
+        valid: usize,
+        reply: Sender<Result<KnnChunkOut>>,
+    },
+}
+
+/// Cloneable, thread-safe handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeService {
+    tx: Sender<Job>,
+    metas: Vec<ArtifactMeta>,
+    platform: String,
+}
+
+// Sender<T> is Send+!Sync in std; wrap sends behind a clone per call.
+// RuntimeService is used via &self from many threads, so guard the
+// sender with a mutex-free clone-on-call pattern: Sender is actually
+// Sync in Rust >= 1.72 (documented Send+Sync). Nothing more needed.
+
+impl RuntimeService {
+    /// Spawn the runtime thread: create the CPU client, compile every
+    /// artifact in `dir`, and start serving.
+    pub fn spawn(dir: PathBuf) -> Result<Self> {
+        let (tx, rx) = channel::<Job>();
+        let (boot_tx, boot_rx) = channel::<Result<(Vec<ArtifactMeta>, String)>>();
+        std::thread::Builder::new()
+            .name("asnn-pjrt".into())
+            .spawn(move || {
+                let (registry, platform) = match PjrtRuntime::cpu()
+                    .and_then(|rt| Ok((rt.load_registry(&dir)?, rt.platform())))
+                {
+                    Ok(ok) => ok,
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let metas: Vec<ArtifactMeta> =
+                    registry.manifest.iter().cloned().collect();
+                let _ = boot_tx.send(Ok((metas, platform)));
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::DiskCount { artifact, window, r, k, metric_l1, reply } => {
+                            let out = registry
+                                .get(&artifact)
+                                .ok_or_else(|| missing(&artifact))
+                                .and_then(|a| a.disk_count(&window, r, k, metric_l1));
+                            let _ = reply.send(out);
+                        }
+                        Job::DiskCountBatch { artifact, windows, rs, k, metric_l1, reply } => {
+                            let out = registry
+                                .get(&artifact)
+                                .ok_or_else(|| missing(&artifact))
+                                .and_then(|a| a.disk_count_batch(&windows, &rs, k, metric_l1));
+                            let _ = reply.send(out);
+                        }
+                        Job::NeighborScan { artifact, window, r, metric_l1, reply } => {
+                            let out = registry
+                                .get(&artifact)
+                                .ok_or_else(|| missing(&artifact))
+                                .and_then(|a| a.neighbor_scan(&window, r, metric_l1));
+                            let _ = reply.send(out);
+                        }
+                        Job::KnnChunk { artifact, queries, chunk, valid, reply } => {
+                            let out = registry
+                                .get(&artifact)
+                                .ok_or_else(|| missing(&artifact))
+                                .and_then(|a| a.knn_chunk(&queries, &chunk, valid));
+                            let _ = reply.send(out);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| AsnnError::Runtime(format!("spawn runtime thread: {e}")))?;
+        let (metas, platform) = boot_rx
+            .recv()
+            .map_err(|_| AsnnError::Runtime("runtime thread died during boot".into()))??;
+        Ok(Self { tx, metas, platform })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Manifest metadata (captured at boot).
+    pub fn metas(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    /// Window sizes with batch-1 disk_count artifacts, ascending.
+    pub fn disk_count_windows(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .metas
+            .iter()
+            .filter(|m| m.kind == "disk_count" && m.batch == 1)
+            .map(|m| m.window)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.iter().find(|m| m.name == name)
+    }
+
+    fn call<T>(&self, build: impl FnOnce(Sender<Result<T>>) -> Job) -> Result<T> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(build(reply_tx))
+            .map_err(|_| AsnnError::Runtime("runtime thread has exited".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| AsnnError::Runtime("runtime thread dropped the reply".into()))?
+    }
+
+    pub fn disk_count(
+        &self,
+        artifact: &str,
+        window: Vec<f32>,
+        r: f32,
+        k: f32,
+        metric_l1: bool,
+    ) -> Result<DiskCountOut> {
+        self.call(|reply| Job::DiskCount {
+            artifact: artifact.to_string(),
+            window,
+            r,
+            k,
+            metric_l1,
+            reply,
+        })
+    }
+
+    pub fn disk_count_batch(
+        &self,
+        artifact: &str,
+        windows: Vec<f32>,
+        rs: Vec<f32>,
+        k: f32,
+        metric_l1: bool,
+    ) -> Result<Vec<DiskCountOut>> {
+        self.call(|reply| Job::DiskCountBatch {
+            artifact: artifact.to_string(),
+            windows,
+            rs,
+            k,
+            metric_l1,
+            reply,
+        })
+    }
+
+    pub fn neighbor_scan(
+        &self,
+        artifact: &str,
+        window: Vec<f32>,
+        r: f32,
+        metric_l1: bool,
+    ) -> Result<NeighborScanOut> {
+        self.call(|reply| Job::NeighborScan {
+            artifact: artifact.to_string(),
+            window,
+            r,
+            metric_l1,
+            reply,
+        })
+    }
+
+    pub fn knn_chunk(
+        &self,
+        artifact: &str,
+        queries: Vec<f32>,
+        chunk: Vec<f32>,
+        valid: usize,
+    ) -> Result<KnnChunkOut> {
+        self.call(|reply| Job::KnnChunk {
+            artifact: artifact.to_string(),
+            queries,
+            chunk,
+            valid,
+            reply,
+        })
+    }
+}
+
+fn missing(name: &str) -> AsnnError {
+    AsnnError::Runtime(format!("artifact {name:?} not in registry"))
+}

@@ -1,0 +1,155 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Typed getters parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+
+use crate::error::{AsnnError, Result};
+
+/// Parsed arguments: a subcommand (first positional before any flag),
+/// remaining positionals, and `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // value-style if next token exists and is not an option
+                    let takes_value =
+                        matches!(it.peek(), Some(nxt) if !nxt.starts_with("--"));
+                    if takes_value {
+                        let v = it.next().unwrap();
+                        out.options.insert(stripped.to_string(), v);
+                    } else {
+                        out.flags.push(stripped.to_string());
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positionals.is_empty() && out.options.is_empty() && out.flags.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str, raw: &str) -> Result<T> {
+        raw.parse::<T>().map_err(|_| {
+            AsnnError::Config(format!(
+                "option --{name}: cannot parse {raw:?} as {}",
+                std::any::type_name::<T>()
+            ))
+        })
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(raw) => self.parse_as(name, raw),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(raw) => self.parse_as(name, raw),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(raw) => self.parse_as(name, raw),
+            None => Ok(default),
+        }
+    }
+
+    /// Required string option.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| AsnnError::Config(format!("missing required option --{name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("bench --n 1000 --engine=active --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("n"), Some("1000"));
+        assert_eq!(a.get("engine"), Some("active"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("run --k 11 --r0 100 --frac 0.5");
+        assert_eq!(a.get_usize("k", 3).unwrap(), 11);
+        assert_eq!(a.get_u64("r0", 1).unwrap(), 100);
+        assert!((a.get_f64("frac", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_parse_is_config_error() {
+        let a = parse("run --k eleven");
+        assert!(matches!(a.get_usize("k", 3), Err(AsnnError::Config(_))));
+    }
+
+    #[test]
+    fn require_missing() {
+        let a = parse("run");
+        assert!(a.require("out").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("serve --quiet");
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get("quiet"), None);
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = parse("viz fig1 fig2 --out dir");
+        assert_eq!(a.subcommand.as_deref(), Some("viz"));
+        assert_eq!(a.positionals, vec!["fig1", "fig2"]);
+        assert_eq!(a.get("out"), Some("dir"));
+    }
+}

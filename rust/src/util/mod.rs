@@ -1,0 +1,46 @@
+//! Zero-dependency substrates: PRNG, CLI parsing, statistics, a minimal
+//! TOML-subset parser, and timing helpers.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (`rand`,
+//! `clap`, `serde`, `criterion`) are re-implemented here at the scale
+//! this project needs.
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod toml;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Clamp `v` into `[lo, hi]`.
+#[inline]
+pub fn clamp_i64(v: i64, lo: i64, hi: i64) -> i64 {
+    v.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn clamp_basics() {
+        assert_eq!(clamp_i64(-5, 0, 10), 0);
+        assert_eq!(clamp_i64(5, 0, 10), 5);
+        assert_eq!(clamp_i64(50, 0, 10), 10);
+    }
+}

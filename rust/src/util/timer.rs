@@ -1,0 +1,86 @@
+//! Timing helpers for benches and coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// Scope timer: measures elapsed wall time since construction.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.elapsed().as_nanos() as u64
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::new();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Human-readable duration (ns/µs/ms/s picked by magnitude).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ns() >= 1_000_000);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, s) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn fmt_magnitudes() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,248 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! Supported: `[section]` headers, `key = value` with string ("..."),
+//! integer, float, boolean, and flat arrays of those; `#` comments;
+//! blank lines. This covers the full config surface of `asnn.toml`
+//! without pulling a parser crate into the offline build.
+
+use std::collections::BTreeMap;
+
+use crate::error::{AsnnError, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section name → (key → value). Top-level keys live
+/// under the empty section name `""`.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = Document::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| {
+                    AsnnError::Config(format!("line {}: unterminated section header", lineno + 1))
+                })?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let val = parse_value(v.trim(), lineno + 1)?;
+                doc.sections.entry(current.clone()).or_default().insert(key, val);
+            } else {
+                return Err(AsnnError::Config(format!(
+                    "line {}: expected `key = value` or `[section]`, got {line:?}",
+                    lineno + 1
+                )));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a quoted string must not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str, lineno: usize) -> Result<Value> {
+    let err = |msg: String| AsnnError::Config(format!("line {lineno}: {msg}"));
+    if raw.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(inner) = raw.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(format!("unterminated string {raw:?}")))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(format!("unterminated array {raw:?}")))?;
+        let mut vals = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in split_top_level(inner) {
+                vals.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(Value::Array(vals));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value {raw:?}")))
+}
+
+/// Split an array body on commas that are not inside quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(
+            r#"
+            top = 1
+            [data]
+            n = 10000            # points
+            seed = 42
+            classes = 3
+            name = "paper-2d"
+            fractions = [0.5, 0.25, 0.25]
+            [search]
+            metric = "l2"
+            refine = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.int_or("", "top", 0), 1);
+        assert_eq!(doc.int_or("data", "n", 0), 10_000);
+        assert_eq!(doc.str_or("data", "name", ""), "paper-2d");
+        assert!(doc.bool_or("search", "refine", false));
+        let arr = doc.get("data", "fractions").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert!((arr[0].as_float().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = Document::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.str_or("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn error_on_garbage() {
+        assert!(Document::parse("not a kv line").is_err());
+        assert!(Document::parse("[unterminated").is_err());
+        assert!(Document::parse("x = ").is_err());
+        assert!(Document::parse("x = \"oops").is_err());
+        assert!(Document::parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = Document::parse("[a]\nx = 1").unwrap();
+        assert_eq!(doc.int_or("a", "missing", 9), 9);
+        assert_eq!(doc.float_or("a", "x", 0.0), 1.0); // int promotes to float
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = Document::parse("xs = []").unwrap();
+        assert_eq!(doc.get("", "xs").unwrap().as_array().unwrap().len(), 0);
+    }
+}

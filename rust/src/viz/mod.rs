@@ -1,0 +1,272 @@
+//! Figure rendering: binary PPM (P6) images reproducing the paper's
+//! Fig. 1 (vectors → image) and Fig. 2 (active search circles), plus
+//! ASCII line plots ([`plot`]) for Fig. 3 — no plotting dependencies.
+
+pub mod plot;
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::active::SearchTrace;
+use crate::data::Dataset;
+use crate::error::{AsnnError, Result};
+use crate::grid::MultiGrid;
+
+/// RGB raster canvas.
+#[derive(Debug, Clone)]
+pub struct Canvas {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major RGB triplets.
+    pixels: Vec<u8>,
+}
+
+/// Distinct per-class colors (cycled when classes exceed the palette).
+pub const PALETTE: [[u8; 3]; 8] = [
+    [220, 50, 47],   // red
+    [38, 139, 210],  // blue
+    [133, 153, 0],   // green
+    [181, 137, 0],   // yellow
+    [211, 54, 130],  // magenta
+    [42, 161, 152],  // cyan
+    [203, 75, 22],   // orange
+    [108, 113, 196], // violet
+];
+
+impl Canvas {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self { width, height, pixels: vec![255u8; width * height * 3] }
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: i64, y: i64, rgb: [u8; 3]) {
+        if x < 0 || y < 0 || x >= self.width as i64 || y >= self.height as i64 {
+            return;
+        }
+        let i = (y as usize * self.width + x as usize) * 3;
+        self.pixels[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
+        let i = (y * self.width + x) * 3;
+        [self.pixels[i], self.pixels[i + 1], self.pixels[i + 2]]
+    }
+
+    /// Filled square dot of side `2*size+1`.
+    pub fn dot(&mut self, x: i64, y: i64, size: i64, rgb: [u8; 3]) {
+        for dy in -size..=size {
+            for dx in -size..=size {
+                self.set(x + dx, y + dy, rgb);
+            }
+        }
+    }
+
+    /// Midpoint circle outline.
+    pub fn circle(&mut self, cx: i64, cy: i64, r: i64, rgb: [u8; 3]) {
+        if r <= 0 {
+            self.set(cx, cy, rgb);
+            return;
+        }
+        let (mut x, mut y) = (r, 0i64);
+        let mut err = 1 - r;
+        while x >= y {
+            for &(px, py) in &[
+                (cx + x, cy + y),
+                (cx - x, cy + y),
+                (cx + x, cy - y),
+                (cx - x, cy - y),
+                (cx + y, cy + x),
+                (cx - y, cy + x),
+                (cx + y, cy - x),
+                (cx - y, cy - x),
+            ] {
+                self.set(px, py, rgb);
+            }
+            y += 1;
+            if err < 0 {
+                err += 2 * y + 1;
+            } else {
+                x -= 1;
+                err += 2 * (y - x) + 1;
+            }
+        }
+    }
+
+    /// A '+' marker (the paper's query symbol in Fig. 2).
+    pub fn plus(&mut self, x: i64, y: i64, arm: i64, rgb: [u8; 3]) {
+        for d in -arm..=arm {
+            self.set(x + d, y, rgb);
+            self.set(x, y + d, rgb);
+        }
+    }
+
+    /// Write binary PPM (P6).
+    pub fn save_ppm(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        write!(w, "P6\n{} {}\n255\n", self.width, self.height)?;
+        w.write_all(&self.pixels)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+/// Fig. 1 (left): points as a scatter on a white canvas, colored by
+/// class — "15 data points as 2 dimensional vectors".
+pub fn render_scatter(ds: &Dataset, side: usize, dot: i64) -> Result<Canvas> {
+    if ds.dim != 2 {
+        return Err(AsnnError::Data("render_scatter requires 2-D data".into()));
+    }
+    let mut canvas = Canvas::new(side, side);
+    let (mins, maxs) = ds.bounds();
+    let sx = (side - 1) as f64 / (maxs[0] - mins[0]).max(f64::MIN_POSITIVE);
+    let sy = (side - 1) as f64 / (maxs[1] - mins[1]).max(f64::MIN_POSITIVE);
+    for i in 0..ds.len() {
+        let p = ds.point(i);
+        let x = ((p[0] - mins[0]) * sx) as i64;
+        // flip y so the image matches plot orientation
+        let y = (side as i64 - 1) - ((p[1] - mins[1]) * sy) as i64;
+        let color = PALETTE[ds.label(i) as usize % PALETTE.len()];
+        canvas.dot(x, y, dot, color);
+    }
+    Ok(canvas)
+}
+
+/// Fig. 1 (right) / Fig. 2 base: the count image itself, one color per
+/// class (pixel colored by its majority class; white = empty).
+pub fn render_grid(grid: &MultiGrid, dot: i64) -> Canvas {
+    let r = grid.resolution();
+    let mut canvas = Canvas::new(r, r);
+    for py in 0..r as u32 {
+        for px in 0..r as u32 {
+            if grid.count_at(px, py) == 0 {
+                continue;
+            }
+            let counts = grid.class_counts_at(px, py);
+            let best = counts
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &c)| c)
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            let color = PALETTE[best % PALETTE.len()];
+            let y = (r as i64 - 1) - py as i64;
+            canvas.dot(px as i64, y, dot, color);
+        }
+    }
+    canvas
+}
+
+/// Fig. 2: overlay the query '+' and every trace circle on the grid
+/// image. Early circles fade to gray; the final circle is black.
+pub fn render_trace(
+    grid: &MultiGrid,
+    query_px: (u32, u32),
+    trace: &SearchTrace,
+    dot: i64,
+) -> Canvas {
+    let mut canvas = render_grid(grid, dot);
+    let r = grid.resolution() as i64;
+    let flip = |py: u32| (r - 1) - py as i64;
+    let n = trace.steps.len().max(1);
+    for (i, step) in trace.steps.iter().enumerate() {
+        let shade = if i + 1 == n {
+            [0u8, 0, 0]
+        } else {
+            let g = 200u8.saturating_sub((i * 120 / n) as u8);
+            [g, g, g]
+        };
+        canvas.circle(query_px.0 as i64, flip(query_px.1), step.r as i64, shade);
+    }
+    canvas.plus(query_px.0 as i64, flip(query_px.1), (dot * 4).max(6), [0, 0, 0]);
+    canvas
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::active::SearchStep;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    #[test]
+    fn canvas_set_get_and_bounds() {
+        let mut c = Canvas::new(10, 10);
+        c.set(3, 4, [1, 2, 3]);
+        assert_eq!(c.get(3, 4), [1, 2, 3]);
+        c.set(-1, 0, [9, 9, 9]); // silently ignored
+        c.set(10, 0, [9, 9, 9]);
+        assert_eq!(c.get(0, 0), [255, 255, 255]);
+    }
+
+    #[test]
+    fn circle_is_hollow_and_centered() {
+        let mut c = Canvas::new(41, 41);
+        c.circle(20, 20, 10, [0, 0, 0]);
+        assert_eq!(c.get(30, 20), [0, 0, 0]);
+        assert_eq!(c.get(20, 30), [0, 0, 0]);
+        assert_eq!(c.get(20, 20), [255, 255, 255]); // center untouched
+    }
+
+    #[test]
+    fn scatter_marks_all_classes() {
+        let ds = generate(&SyntheticSpec::paper_default(200, 77));
+        let c = render_scatter(&ds, 200, 1).unwrap();
+        // at least one pixel of each class color present
+        for class in 0..3 {
+            let target = PALETTE[class];
+            let mut found = false;
+            'outer: for y in 0..200 {
+                for x in 0..200 {
+                    if c.get(x, y) == target {
+                        found = true;
+                        break 'outer;
+                    }
+                }
+            }
+            assert!(found, "class {class} color missing");
+        }
+    }
+
+    #[test]
+    fn grid_render_nonwhite_matches_occupancy() {
+        let ds = generate(&SyntheticSpec::paper_default(500, 78));
+        let grid = MultiGrid::build(&ds, 100).unwrap();
+        let c = render_grid(&grid, 0);
+        let mut colored = 0;
+        for y in 0..100 {
+            for x in 0..100 {
+                if c.get(x, y) != [255, 255, 255] {
+                    colored += 1;
+                }
+            }
+        }
+        assert_eq!(colored, grid.occupied_cells());
+    }
+
+    #[test]
+    fn trace_render_draws_final_black_circle() {
+        let ds = generate(&SyntheticSpec::paper_default(500, 79));
+        let grid = MultiGrid::build(&ds, 200).unwrap();
+        let trace = SearchTrace {
+            steps: vec![SearchStep { r: 30, n: 2 }, SearchStep { r: 50, n: 11 }],
+            converged: true,
+        };
+        let c = render_trace(&grid, (100, 100), &trace, 0);
+        // final circle r=50: pixel at (150, flip(100)) should be black
+        assert_eq!(c.get(150, 99), [0, 0, 0]);
+    }
+
+    #[test]
+    fn ppm_roundtrip_header() {
+        let c = Canvas::new(4, 3);
+        let path = std::env::temp_dir().join(format!("asnn-viz-{}.ppm", std::process::id()));
+        c.save_ppm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n4 3\n255\n"));
+        assert_eq!(bytes.len(), 11 + 4 * 3 * 3);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,203 @@
+//! ASCII line plots — regenerates the paper's Fig. 3 *as a figure* in
+//! the terminal and in bench logs (no plotting libraries offline).
+//!
+//! Log-log or lin-lin scatter of multiple labeled series over a
+//! character canvas, with axes and legends.
+
+/// One labeled series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+    pub marker: char,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, marker: char) -> Self {
+        Self { label: label.into(), points: Vec::new(), marker }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Plot configuration.
+#[derive(Debug, Clone)]
+pub struct PlotSpec {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    pub log_x: bool,
+    pub log_y: bool,
+    pub x_label: String,
+    pub y_label: String,
+}
+
+impl PlotSpec {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            width: 72,
+            height: 22,
+            log_x: false,
+            log_y: false,
+            x_label: "x".into(),
+            y_label: "y".into(),
+        }
+    }
+
+    pub fn loglog(mut self) -> Self {
+        self.log_x = true;
+        self.log_y = true;
+        self
+    }
+
+    pub fn labels(mut self, x: impl Into<String>, y: impl Into<String>) -> Self {
+        self.x_label = x.into();
+        self.y_label = y.into();
+        self
+    }
+}
+
+fn transform(v: f64, log: bool) -> f64 {
+    if log {
+        v.max(f64::MIN_POSITIVE).log10()
+    } else {
+        v
+    }
+}
+
+/// Render series onto an ASCII canvas.
+pub fn render(spec: &PlotSpec, series: &[Series]) -> String {
+    let (w, h) = (spec.width, spec.height);
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .map(|(x, y)| (transform(x, spec.log_x), transform(y, spec.log_y)))
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return format!("{}\n(no data)\n", spec.title);
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    // avoid zero extent
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut canvas = vec![vec![' '; w]; h];
+    for s in series {
+        for &(px, py) in &s.points {
+            let tx = transform(px, spec.log_x);
+            let ty = transform(py, spec.log_y);
+            if !(tx.is_finite() && ty.is_finite()) {
+                continue;
+            }
+            let cx = ((tx - x0) / (x1 - x0) * (w - 1) as f64).round() as usize;
+            let cy = ((ty - y0) / (y1 - y0) * (h - 1) as f64).round() as usize;
+            let row = h - 1 - cy.min(h - 1);
+            canvas[row][cx.min(w - 1)] = s.marker;
+        }
+    }
+    let fmt_tick = |v: f64, log: bool| -> String {
+        let raw = if log { 10f64.powf(v) } else { v };
+        if raw.abs() >= 1000.0 {
+            format!("{:.0e}", raw)
+        } else if raw.abs() >= 1.0 {
+            format!("{raw:.1}")
+        } else {
+            format!("{raw:.2e}")
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&format!("{}\n", spec.title));
+    out.push_str(&format!(
+        "y: {} [{} .. {}]{}\n",
+        spec.y_label,
+        fmt_tick(y0, spec.log_y),
+        fmt_tick(y1, spec.log_y),
+        if spec.log_y { " (log)" } else { "" }
+    ));
+    for row in &canvas {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(w));
+    out.push('\n');
+    out.push_str(&format!(
+        "x: {} [{} .. {}]{}\n",
+        spec.x_label,
+        fmt_tick(x0, spec.log_x),
+        fmt_tick(x1, spec.log_x),
+        if spec.log_x { " (log)" } else { "" }
+    ));
+    for s in series {
+        out.push_str(&format!("  {} = {}\n", s.marker, s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_series() -> Vec<Series> {
+        let mut linear = Series::new("linear", 'x');
+        let mut flat = Series::new("flat", 'o');
+        for i in 1..=6 {
+            let n = 10f64.powi(i);
+            linear.push(n, n * 1e-6);
+            flat.push(n, 3e-3);
+        }
+        vec![linear, flat]
+    }
+
+    #[test]
+    fn renders_markers_and_legend() {
+        let spec = PlotSpec::new("fig3").loglog().labels("N", "secs");
+        let text = render(&spec, &demo_series());
+        assert!(text.contains('x'));
+        assert!(text.contains('o'));
+        assert!(text.contains("x = linear"));
+        assert!(text.contains("o = flat"));
+        assert!(text.contains("(log)"));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let spec = PlotSpec::new("empty");
+        let text = render(&spec, &[Series::new("nothing", '.')]);
+        assert!(text.contains("no data"));
+    }
+
+    #[test]
+    fn linear_series_spans_canvas_diagonal() {
+        let spec = PlotSpec::new("diag").loglog();
+        let text = render(&spec, &demo_series()[..1].to_vec());
+        let rows: Vec<&str> = text.lines().filter(|l| l.starts_with('|')).collect();
+        // first canvas row (max y) holds the largest point, last the smallest
+        assert!(rows.first().unwrap().contains('x'));
+        assert!(rows.last().unwrap().contains('x'));
+    }
+
+    #[test]
+    fn constant_series_no_zero_division() {
+        let mut s = Series::new("const", '#');
+        s.push(1.0, 5.0);
+        s.push(2.0, 5.0);
+        let text = render(&PlotSpec::new("c"), &[s]);
+        assert!(text.contains('#'));
+    }
+}

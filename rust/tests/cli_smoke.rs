@@ -1,0 +1,104 @@
+//! CLI smoke tests: run the `asnn` binary end-to-end as a subprocess.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn asnn_bin() -> PathBuf {
+    // target dir layout: .../target/<profile>/deps/<this test>; the
+    // binary sits two levels up
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("asnn");
+    p
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(asnn_bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn asnn");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (stdout, _, ok) = run(&["help"]);
+    assert!(ok);
+    for sub in ["gen-data", "query", "classify", "serve", "viz"] {
+        assert!(stdout.contains(sub), "missing {sub}: {stdout}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_with_message() {
+    let (_, stderr, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn gen_data_and_info_roundtrip() {
+    let tmp = std::env::temp_dir().join(format!("asnn-cli-{}.csv", std::process::id()));
+    let tmp_str = tmp.to_str().unwrap();
+    let (stdout, stderr, ok) =
+        run(&["gen-data", "--n", "500", "--out", tmp_str, "--seed", "9"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("wrote 500 points"), "{stdout}");
+    let (stdout, stderr, ok) = run(&[
+        "info",
+        "--data",
+        tmp_str,
+        "--resolution",
+        "200",
+        "--n",
+        "500",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("n=500"), "{stdout}");
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn query_returns_k_rows() {
+    let (stdout, stderr, ok) = run(&[
+        "query", "--n", "2000", "--k", "5", "--x", "0.5", "--y", "0.5", "--engine", "brute",
+        "--resolution", "500",
+    ]);
+    assert!(ok, "{stderr}");
+    let rows = stdout.lines().filter(|l| l.trim_start().starts_with("id=")).count();
+    assert_eq!(rows, 5, "{stdout}");
+}
+
+#[test]
+fn classify_reports_agreement() {
+    let (stdout, stderr, ok) = run(&[
+        "classify", "--n", "5000", "--queries", "20", "--engine", "active", "--resolution",
+        "1000",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("agreement="), "{stdout}");
+}
+
+#[test]
+fn viz_writes_ppm_files() {
+    let out = std::env::temp_dir().join(format!("asnn-viz-{}", std::process::id()));
+    let (stdout, stderr, ok) = run(&["viz", "fig1", "--out", out.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("fig1"), "{stdout}");
+    assert!(out.join("fig1_vectors.ppm").exists());
+    assert!(out.join("fig1_image.ppm").exists());
+    std::fs::remove_dir_all(out).ok();
+}
+
+#[test]
+fn bad_config_value_rejected() {
+    let (_, stderr, ok) = run(&["query", "--n", "100", "--k", "oops", "--x", "0", "--y", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("cannot parse"), "{stderr}");
+}

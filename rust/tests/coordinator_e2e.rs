@@ -1,0 +1,138 @@
+//! End-to-end coordinator integration: server + router + engines over
+//! real TCP, including concurrent load and the batcher.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use asnn::coordinator::batcher::Batcher;
+use asnn::coordinator::server::Client;
+use asnn::coordinator::{Metrics, Request, Response, Router, Server};
+use asnn::data::synthetic::{generate, generate_queries, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::kdtree::KdTreeEngine;
+
+fn full_router(n: usize, seed: u64) -> Router {
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(n, seed)));
+    let mut router = Router::new("active", Arc::new(Metrics::new()));
+    router.register("brute", Arc::new(BruteEngine::new(ds.clone())));
+    router.register("kdtree", Arc::new(KdTreeEngine::build(ds.clone())));
+    router.register(
+        "active",
+        Arc::new(ActiveEngine::new(ds, 1000, ActiveParams::default()).unwrap()),
+    );
+    router
+}
+
+#[test]
+fn serve_knn_and_classify_over_tcp() {
+    let handle = Server::new(Arc::new(full_router(5000, 501)), 2)
+        .spawn("127.0.0.1:0")
+        .unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    match c.call(&Request::Knn { k: 11, x: 0.4, y: 0.6, engine: None }).unwrap() {
+        Response::Neighbors(hits) => {
+            assert!(hits.len() <= 11 && !hits.is_empty());
+        }
+        other => panic!("{other:?}"),
+    }
+    match c
+        .call(&Request::Classify { k: 11, x: 0.4, y: 0.6, engine: Some("brute".into()) })
+        .unwrap()
+    {
+        Response::Label(l) => assert!(l < 3),
+        other => panic!("{other:?}"),
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn engines_agree_through_the_wire() {
+    let handle = Server::new(Arc::new(full_router(3000, 502)), 2)
+        .spawn("127.0.0.1:0")
+        .unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    // exact engines must return identical id sets over TCP too
+    let get_ids = |c: &mut Client, engine: &str| -> Vec<u32> {
+        match c
+            .call(&Request::Knn { k: 9, x: 0.3, y: 0.3, engine: Some(engine.into()) })
+            .unwrap()
+        {
+            Response::Neighbors(hits) => {
+                let mut v: Vec<u32> = hits.iter().map(|h| h.id).collect();
+                v.sort();
+                v
+            }
+            other => panic!("{other:?}"),
+        }
+    };
+    assert_eq!(get_ids(&mut c, "brute"), get_ids(&mut c, "kdtree"));
+    handle.shutdown();
+}
+
+#[test]
+fn sustained_concurrent_load_with_metrics() {
+    let router = Arc::new(full_router(10_000, 503));
+    let handle = Server::new(router.clone(), 4).spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+    let queries = generate_queries(20, 2, 504);
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let queries = queries.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for q in &queries {
+                    match c
+                        .call(&Request::Knn { k: 5, x: q[0], y: q[1], engine: None })
+                        .unwrap()
+                    {
+                        Response::Neighbors(_) => {}
+                        other => panic!("thread {t}: {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.knn_requests, 80);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.knn_p99_us > 0.0);
+    handle.shutdown();
+}
+
+#[test]
+fn batcher_feeds_batch_artifact_shape() {
+    // simulate the coordinator's batching of same-window queries
+    let (tx, rx) = std::sync::mpsc::channel::<Vec<usize>>();
+    let batcher = Batcher::new(16, Duration::from_millis(5), move |batch: Vec<usize>| {
+        tx.send(batch).unwrap();
+    });
+    for i in 0..40 {
+        assert!(batcher.submit(i));
+    }
+    drop(batcher);
+    let mut seen = 0;
+    let mut max_batch = 0;
+    while let Ok(batch) = rx.try_recv() {
+        assert!(batch.len() <= 16);
+        max_batch = max_batch.max(batch.len());
+        seen += batch.len();
+    }
+    assert_eq!(seen, 40);
+    assert!(max_batch > 1, "no batching happened");
+}
+
+#[test]
+fn quit_closes_connection_cleanly() {
+    let handle = Server::new(Arc::new(full_router(1000, 505)), 1)
+        .spawn("127.0.0.1:0")
+        .unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    assert_eq!(c.call(&Request::Quit).unwrap(), Response::Text("bye".into()));
+    // further calls fail because the server side closed
+    assert!(c.call(&Request::Ping).is_err());
+    handle.shutdown();
+}

@@ -1,0 +1,126 @@
+//! Cross-engine integration: every engine approximates the brute-force
+//! ground truth on the paper's workload, and the exact engines agree
+//! perfectly.
+
+use std::sync::Arc;
+
+use asnn::config::{R0Policy, SearchMode};
+use asnn::data::synthetic::{generate, generate_queries, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::kdtree::KdTreeEngine;
+use asnn::engine::lsh::{LshEngine, LshParams};
+use asnn::engine::{Neighbor, NnEngine};
+
+fn recall(hits: &[Neighbor], truth: &[Neighbor]) -> f64 {
+    let ids: Vec<u32> = truth.iter().map(|n| n.id).collect();
+    hits.iter().filter(|h| ids.contains(&h.id)).count() as f64 / truth.len() as f64
+}
+
+#[test]
+fn kdtree_is_exact() {
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(3000, 301)));
+    let brute = BruteEngine::new(ds.clone());
+    let kd = KdTreeEngine::build(ds);
+    for q in generate_queries(25, 2, 302) {
+        let t = brute.knn(&q, 11).unwrap();
+        let a = kd.knn(&q, 11).unwrap();
+        assert_eq!(recall(&a, &t), 1.0);
+    }
+}
+
+#[test]
+fn active_refined_high_recall_at_paper_resolution() {
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(50_000, 303)));
+    let brute = BruteEngine::new(ds.clone());
+    let active = ActiveEngine::new(
+        ds,
+        3000,
+        ActiveParams {
+            mode: SearchMode::Refined,
+            tolerance: 2,
+            r0_policy: R0Policy::Density,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let queries = generate_queries(30, 2, 304);
+    let mut total = 0.0;
+    for q in &queries {
+        let t = brute.knn(q, 11).unwrap();
+        let a = active.knn(q, 11).unwrap();
+        total += recall(&a, &t);
+    }
+    let avg = total / queries.len() as f64;
+    assert!(avg > 0.85, "avg recall {avg}");
+}
+
+#[test]
+fn all_engines_handle_same_query_surface() {
+    let ds = Arc::new(generate(&SyntheticSpec::blobs(4000, 3, 305)));
+    let engines: Vec<Box<dyn NnEngine>> = vec![
+        Box::new(BruteEngine::new(ds.clone())),
+        Box::new(KdTreeEngine::build(ds.clone())),
+        Box::new(LshEngine::build(ds.clone(), LshParams::default())),
+        Box::new(ActiveEngine::new(ds, 1000, ActiveParams::default()).unwrap()),
+    ];
+    // query at the class-0 blob center so every engine (including the
+    // bucket-local LSH) has candidates nearby
+    let q = [0.8, 0.5];
+    for e in &engines {
+        let hits = e.knn(&q, 7).unwrap();
+        assert!(!hits.is_empty(), "{}", e.name());
+        assert!(hits.len() <= 7, "{}", e.name());
+        for w in hits.windows(2) {
+            assert!(w[0].dist <= w[1].dist, "{} not sorted", e.name());
+        }
+        let label = e.classify(&q, 7).unwrap();
+        assert!(label < 3, "{}", e.name());
+        // invalid input surface behaves uniformly
+        assert!(e.knn(&q, 0).is_err(), "{}", e.name());
+    }
+}
+
+#[test]
+fn classification_agreement_matches_paper_band() {
+    // the paper reports "up to 98%" agreement on uniform data at
+    // 3000² with k = 11; we require ≥ 90% on a 30k-point instance
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(30_000, 306)));
+    let brute = BruteEngine::new(ds.clone());
+    let active = ActiveEngine::new(ds, 3000, ActiveParams::default()).unwrap();
+    let queries = generate_queries(100, 2, 307);
+    let mut agree = 0;
+    for q in &queries {
+        if active.classify(q, 11).unwrap() == brute.classify(q, 11).unwrap() {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 90, "agreement {agree}/100");
+}
+
+#[test]
+fn active_work_is_sublinear_in_n() {
+    // the paper's headline: active-search cost does not grow with N
+    let queries = generate_queries(10, 2, 308);
+    let mut works = Vec::new();
+    for &n in &[10_000usize, 100_000] {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(n, 309)));
+        let active = ActiveEngine::new(
+            ds,
+            3000,
+            ActiveParams { r0_policy: R0Policy::Density, ..Default::default() },
+        )
+        .unwrap();
+        let mut total_work = 0u64;
+        for q in &queries {
+            let (_, st) = active.knn_stats(q, 11).unwrap();
+            total_work += st.work;
+        }
+        works.push(total_work);
+    }
+    // 10× the data must NOT cost 10× the pixels; allow 3× headroom
+    assert!(
+        works[1] < works[0] * 3,
+        "work grew with N: {works:?}"
+    );
+}

@@ -1,0 +1,88 @@
+//! Integration: grid index invariants across datasets, resolutions,
+//! and the scan primitives (counts must be conserved everywhere).
+
+use asnn::config::Metric;
+use asnn::active::scan;
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::grid::{MultiGrid, Pyramid};
+
+#[test]
+fn counts_conserved_across_resolutions() {
+    let ds = generate(&SyntheticSpec::paper_default(5000, 401));
+    for &res in &[64usize, 256, 1000, 3000] {
+        let g = MultiGrid::build(&ds, res).unwrap();
+        let total: u64 = (0..res as u32)
+            .map(|y| g.total_row(y).iter().map(|&v| v as u64).sum::<u64>())
+            .sum();
+        assert_eq!(total, 5000, "res {res}");
+    }
+}
+
+#[test]
+fn full_disk_scan_counts_everything_all_families() {
+    for spec in [
+        SyntheticSpec::paper_default(2000, 402),
+        SyntheticSpec::blobs(2000, 3, 403),
+        SyntheticSpec::rings(2000, 3, 404),
+    ] {
+        let ds = generate(&spec);
+        let g = MultiGrid::build(&ds, 300).unwrap();
+        let n = scan::count_in_disk(&g, 150, 150, 600, Metric::L2);
+        assert_eq!(n, 2000, "{:?}", spec.family);
+    }
+}
+
+#[test]
+fn disk_monotone_in_radius() {
+    let ds = generate(&SyntheticSpec::paper_default(3000, 405));
+    let g = MultiGrid::build(&ds, 500).unwrap();
+    let mut last = 0;
+    for r in (0..250).step_by(10) {
+        let n = scan::count_in_disk(&g, 250, 250, r, Metric::L2);
+        assert!(n >= last, "r={r}: {n} < {last}");
+        last = n;
+    }
+}
+
+#[test]
+fn pyramid_consistent_with_grid() {
+    let ds = generate(&SyntheticSpec::blobs(4000, 3, 406));
+    let g = MultiGrid::build(&ds, 512).unwrap();
+    let p = Pyramid::build(&g);
+    // coarse count at any level bounds the fine pixel count from above
+    for &(px, py) in &[(100u32, 100u32), (256, 256), (500, 30)] {
+        let fine = g.count_at(px, py) as u32;
+        for level in 0..p.num_levels() {
+            assert!(p.count_at(level, px, py) >= fine);
+        }
+    }
+}
+
+#[test]
+fn collect_candidates_have_valid_ids_and_distances() {
+    let ds = generate(&SyntheticSpec::paper_default(1500, 407));
+    let g = MultiGrid::build(&ds, 400).unwrap();
+    let cands = scan::collect_in_disk(&g, 200, 200, 80, Metric::L2);
+    for c in &cands {
+        assert!((c.point_id as usize) < ds.len());
+        assert!(c.pixel_dist <= 80.0 * 80.0);
+        // the candidate's true pixel really is in the circle
+        let p = ds.point(c.point_id as usize);
+        let (px, py) = g.geometry().pixel_of(p[0], p[1]);
+        let dx = px as i64 - 200;
+        let dy = py as i64 - 200;
+        assert!(dx * dx + dy * dy <= 80 * 80);
+    }
+}
+
+#[test]
+fn large_dataset_grid_build_is_complete() {
+    let ds = generate(&SyntheticSpec::paper_default(200_000, 408));
+    let g = MultiGrid::build(&ds, 3000).unwrap();
+    assert_eq!(g.n_points(), 200_000);
+    // memory model: 2 B total + 2 B·C classes + 4 B row-prefix per
+    // pixel, plus 8 B bucket + 2 B label per point
+    let expect =
+        3000 * 3000 * 2 + 3000 * 3000 * 3 * 2 + 3000 * 3001 * 4 + 200_000 * 8 + 200_000 * 2;
+    assert_eq!(g.memory_bytes(), expect);
+}

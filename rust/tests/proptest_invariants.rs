@@ -1,0 +1,175 @@
+//! Property-based invariants, driven by the in-repo PRNG (the proptest
+//! crate is not in the offline vendor set — each property runs against
+//! hundreds of randomized cases with shrink-free reporting of the
+//! failing seed).
+
+use std::sync::Arc;
+
+use asnn::active::radius::{RadiusPolicy, Step};
+use asnn::active::scan;
+use asnn::config::Metric;
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::data::Dataset;
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::kdtree::KdTreeEngine;
+use asnn::engine::{NnEngine, TopK};
+use asnn::grid::MultiGrid;
+use asnn::util::rng::Rng;
+
+/// Property: fast row-span scan ≡ naive per-pixel scan, both metrics,
+/// for random centers/radii including image borders.
+#[test]
+fn prop_scan_equivalence() {
+    let ds = generate(&SyntheticSpec::paper_default(3000, 601));
+    let g = MultiGrid::build(&ds, 257).unwrap(); // odd resolution on purpose
+    let mut rng = Rng::new(602);
+    for case in 0..300 {
+        let cx = rng.below(257) as u32;
+        let cy = rng.below(257) as u32;
+        let r = rng.below(90) as u32;
+        for metric in [Metric::L2, Metric::L1] {
+            let fast = scan::count_in_disk(&g, cx, cy, r, metric);
+            let naive = scan::count_in_disk_naive(&g, cx, cy, r, metric);
+            assert_eq!(fast, naive, "case {case}: cx={cx} cy={cy} r={r} {metric:?}");
+        }
+    }
+}
+
+/// Property: TopK(k) over any stream = sorted prefix of the full sort.
+#[test]
+fn prop_topk_matches_sort() {
+    let mut rng = Rng::new(603);
+    for case in 0..200 {
+        let n = 1 + rng.below(200) as usize;
+        let k = 1 + rng.below(n as u64) as usize;
+        let dists: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let mut top = TopK::new(k);
+        for (i, &d) in dists.iter().enumerate() {
+            top.push(asnn::engine::Neighbor { id: i as u32, dist: d, label: 0 });
+        }
+        let got: Vec<f64> = top.into_sorted().iter().map(|x| x.dist).collect();
+        let mut want = dists.clone();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want.truncate(k);
+        assert_eq!(got.len(), k, "case {case}");
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-15, "case {case}");
+        }
+    }
+}
+
+/// Property: the radius policy always terminates within max_iters and,
+/// under any monotone count function, Done/Settle circles hold ≥ k
+/// points whenever any radius does.
+#[test]
+fn prop_radius_policy_terminates() {
+    let mut rng = Rng::new(604);
+    for case in 0..300 {
+        let k = 1 + rng.below(50) as usize;
+        let density = 10f64.powf(rng.uniform(-4.0, 0.5));
+        let jitter = rng.uniform(0.0, 0.3);
+        // monotone count model with noise rounded to integers
+        let count = |r: u32| -> u64 {
+            let area = std::f64::consts::PI * (r as f64).powi(2);
+            ((area * density) * (1.0 + jitter * ((r % 7) as f64 / 7.0))).round() as u64
+        };
+        let max_iters = 64;
+        let mut policy = RadiusPolicy::new(k, 0, max_iters, 1_000_000);
+        let mut r = 1 + rng.below(500) as u32;
+        let mut iters = 0;
+        loop {
+            iters += 1;
+            assert!(iters <= max_iters, "case {case} did not terminate");
+            let n = count(r);
+            match policy.step(r, n) {
+                Step::Done => {
+                    assert_eq!(n as usize, k, "case {case}");
+                    break;
+                }
+                Step::Settle(rs) => {
+                    assert!(count(rs) >= k as u64, "case {case}: settle under k");
+                    break;
+                }
+                Step::Exhausted => break,
+                Step::Continue(next) => {
+                    assert!(next >= 1);
+                    r = next;
+                }
+            }
+        }
+    }
+}
+
+/// Property: kd-tree = brute force on random datasets of random sizes,
+/// including duplicates and degenerate (collinear) data.
+#[test]
+fn prop_kdtree_exactness() {
+    let mut rng = Rng::new(605);
+    for case in 0..40 {
+        let n = 2 + rng.below(400) as usize;
+        let k = 1 + rng.below(n.min(20) as u64) as usize;
+        let mut pts = Vec::with_capacity(n * 2);
+        let degenerate = case % 5 == 0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            // every 5th case: all points on a line (splitting stress)
+            let y = if degenerate { 0.5 } else { rng.next_f64() };
+            pts.push(x);
+            pts.push(y);
+            if case % 7 == 0 && pts.len() >= 4 {
+                // inject duplicates
+                let px = pts[0];
+                let py = pts[1];
+                let len = pts.len();
+                pts[len - 2] = px;
+                pts[len - 1] = py;
+            }
+        }
+        let labels = vec![0u16; n];
+        let ds = Arc::new(Dataset::new(2, pts, labels, 1).unwrap());
+        let brute = BruteEngine::new(ds.clone());
+        let kd = KdTreeEngine::build(ds);
+        let q = [rng.next_f64(), rng.next_f64()];
+        let a = kd.knn(&q, k).unwrap();
+        let b = brute.knn(&q, k).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!(
+                (x.dist - y.dist).abs() < 1e-12,
+                "case {case}: kd {} vs brute {}",
+                x.dist,
+                y.dist
+            );
+        }
+    }
+}
+
+/// Property: grid pixel mapping is total (never panics, always in
+/// range) for arbitrary finite inputs including far outliers.
+#[test]
+fn prop_pixel_mapping_total() {
+    let ds = generate(&SyntheticSpec::paper_default(100, 606));
+    let g = MultiGrid::build(&ds, 128).unwrap();
+    let geom = g.geometry();
+    let mut rng = Rng::new(607);
+    for _ in 0..1000 {
+        let x = rng.uniform(-1e6, 1e6);
+        let y = rng.uniform(-1e6, 1e6);
+        let (px, py) = geom.pixel_of(x, y);
+        assert!(px < 128 && py < 128);
+    }
+}
+
+/// Property: Eq. 1 is scale-consistent — doubling both k and n leaves
+/// the next radius unchanged.
+#[test]
+fn prop_eq1_scale_invariance() {
+    let mut rng = Rng::new(608);
+    for _ in 0..500 {
+        let r = 1 + rng.below(3000) as u32;
+        let k = 1 + rng.below(100);
+        let n = 1 + rng.below(10_000);
+        let a = RadiusPolicy::eq1(r, k, n);
+        let b = RadiusPolicy::eq1(r, k * 2, n * 2);
+        assert_eq!(a, b, "r={r} k={k} n={n}");
+    }
+}

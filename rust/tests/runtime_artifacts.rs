@@ -1,0 +1,250 @@
+//! Integration: AOT artifacts load, compile, and execute via PJRT, and
+//! agree with the native rust scan. Tests are skipped (pass trivially)
+//! when `artifacts/manifest.toml` is absent — run `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use asnn::active::scan;
+use asnn::config::Metric;
+use asnn::data::synthetic::{generate, generate_queries, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::active_pjrt::ActivePjrtEngine;
+use asnn::engine::NnEngine;
+use asnn::grid::MultiGrid;
+use asnn::runtime::RuntimeService;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.toml").exists().then_some(dir)
+}
+
+fn service() -> Option<RuntimeService> {
+    artifacts_dir().map(|d| RuntimeService::spawn(d).expect("spawn runtime"))
+}
+
+#[test]
+fn registry_exposes_disk_count_ladder() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let windows = svc.disk_count_windows();
+    assert!(!windows.is_empty());
+    assert!(windows.windows(2).all(|w| w[0] < w[1]));
+    assert_eq!(svc.platform(), "cpu");
+}
+
+#[test]
+fn disk_count_matches_native_scan() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let ds = generate(&SyntheticSpec::paper_default(5000, 201));
+    let grid = MultiGrid::build(&ds, 512).unwrap();
+    let w = svc.disk_count_windows()[0];
+    let name = format!("disk_count_w{w}_b1");
+    for &(cx, cy, r) in &[(256u32, 256u32, 10u32), (256, 256, 25), (40, 470, 15)] {
+        assert!(2 * r as usize + 1 <= w);
+        let mut window = vec![0f32; 3 * w * w];
+        grid.crop_classes_f32(cx, cy, w, &mut window);
+        let out = svc.disk_count(&name, window, r as f32, 11.0, false).unwrap();
+        let native = scan::count_in_disk(&grid, cx, cy, r, Metric::L2);
+        assert_eq!(out.total as u64, native, "cx={cx} cy={cy} r={r}");
+        let cls_sum: f32 = out.class_counts.iter().sum();
+        assert_eq!(cls_sum as u64, native);
+    }
+}
+
+#[test]
+fn disk_count_l1_matches_native() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let ds = generate(&SyntheticSpec::paper_default(5000, 202));
+    let grid = MultiGrid::build(&ds, 512).unwrap();
+    let w = svc.disk_count_windows()[0];
+    let name = format!("disk_count_w{w}_b1");
+    let (cx, cy, r) = (200u32, 300u32, 20u32);
+    let mut window = vec![0f32; 3 * w * w];
+    grid.crop_classes_f32(cx, cy, w, &mut window);
+    let out = svc.disk_count(&name, window, r as f32, 11.0, true).unwrap();
+    let native = scan::count_in_disk(&grid, cx, cy, r, Metric::L1);
+    assert_eq!(out.total as u64, native);
+}
+
+#[test]
+fn eq1_next_radius_matches_rust_policy() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    use asnn::active::radius::RadiusPolicy;
+    let ds = generate(&SyntheticSpec::paper_default(20000, 203));
+    let grid = MultiGrid::build(&ds, 512).unwrap();
+    let w = svc.disk_count_windows()[0];
+    let name = format!("disk_count_w{w}_b1");
+    let (cx, cy, r) = (256u32, 256u32, 14u32);
+    let mut window = vec![0f32; 3 * w * w];
+    grid.crop_classes_f32(cx, cy, w, &mut window);
+    let out = svc.disk_count(&name, window, r as f32, 11.0, false).unwrap();
+    let n = out.total as u64;
+    if n > 0 {
+        assert_eq!(out.next_r as u32, RadiusPolicy::eq1(r, 11, n));
+    }
+}
+
+#[test]
+fn batched_disk_count_matches_single() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let ds = generate(&SyntheticSpec::paper_default(8000, 204));
+    let grid = MultiGrid::build(&ds, 512).unwrap();
+    let w = svc.disk_count_windows()[0];
+    let b1 = format!("disk_count_w{w}_b1");
+    let b16 = format!("disk_count_w{w}_b16");
+    if svc.meta(&b16).is_none() {
+        eprintln!("skipped: no b16 artifact");
+        return;
+    }
+    let centers: Vec<(u32, u32)> = (0..16).map(|i| (100 + i * 20, 150 + i * 10)).collect();
+    let r = 12.0f32;
+    let mut windows = vec![0f32; 16 * 3 * w * w];
+    for (i, &(cx, cy)) in centers.iter().enumerate() {
+        grid.crop_classes_f32(cx, cy, w, &mut windows[i * 3 * w * w..(i + 1) * 3 * w * w]);
+    }
+    let outs = svc
+        .disk_count_batch(&b16, windows, vec![r; 16], 11.0, false)
+        .unwrap();
+    assert_eq!(outs.len(), 16);
+    for (i, &(cx, cy)) in centers.iter().enumerate() {
+        let mut window = vec![0f32; 3 * w * w];
+        grid.crop_classes_f32(cx, cy, w, &mut window);
+        let single = svc.disk_count(&b1, window, r, 11.0, false).unwrap();
+        assert_eq!(outs[i].total, single.total, "query {i}");
+    }
+}
+
+#[test]
+fn neighbor_scan_finds_occupied_pixels() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let ds = generate(&SyntheticSpec::paper_default(300, 205));
+    let grid = MultiGrid::build(&ds, 512).unwrap();
+    let w = svc.disk_count_windows()[0];
+    let name = format!("neighbor_scan_w{w}");
+    if svc.meta(&name).is_none() {
+        eprintln!("skipped: no neighbor_scan artifact");
+        return;
+    }
+    let (cx, cy, r) = (256u32, 256u32, 30u32);
+    let mut window = vec![0f32; w * w];
+    grid.crop_total_f32(cx, cy, w, &mut window);
+    let out = svc.neighbor_scan(&name, window.clone(), r as f32, false).unwrap();
+    let native = scan::count_in_disk(&grid, cx, cy, r, Metric::L2);
+    let hits = out.indices.iter().filter(|&&i| i >= 0).count();
+    // every occupied in-circle pixel (≤ k_max of them) must be returned
+    let occupied_pixels = {
+        let mut n = 0u64;
+        let half = (w / 2) as i64;
+        for wy in 0..w as i64 {
+            for wx in 0..w as i64 {
+                let dx = wx - half;
+                let dy = wy - half;
+                if dx * dx + dy * dy <= (r as i64) * (r as i64)
+                    && window[(wy * w as i64 + wx) as usize] > 0.0
+                {
+                    n += 1;
+                }
+            }
+        }
+        n
+    };
+    assert_eq!(hits as u64, occupied_pixels.min(32));
+    assert!(native >= hits as u64); // points ≥ pixels
+    // distances ascend among live entries
+    let live: Vec<f32> = out.dists.iter().copied().filter(|d| d.is_finite()).collect();
+    for pair in live.windows(2) {
+        assert!(pair[0] <= pair[1]);
+    }
+}
+
+#[test]
+fn knn_chunk_matches_exact_distances() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let Some(meta) = svc.meta("knn_chunk_b1") else {
+        eprintln!("skipped: no knn_chunk artifact");
+        return;
+    };
+    let chunk_len = meta.chunk;
+    let ds = generate(&SyntheticSpec::paper_default(1000, 206));
+    let mut chunk = vec![0f32; chunk_len * 2];
+    for i in 0..1000 {
+        chunk[i * 2] = ds.point(i)[0] as f32;
+        chunk[i * 2 + 1] = ds.point(i)[1] as f32;
+    }
+    let q = [0.5f32, 0.5f32];
+    let out = svc.knn_chunk("knn_chunk_b1", q.to_vec(), chunk, 1000).unwrap();
+    let mut exact: Vec<(f64, usize)> = (0..1000)
+        .map(|i| (ds.dist2(i, &[0.5, 0.5]), i))
+        .collect();
+    exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for j in 0..5 {
+        assert_eq!(out.indices[j] as usize, exact[j].1, "rank {j}");
+        assert!((out.dists[j] as f64 - exact[j].0).abs() < 1e-5);
+    }
+    // padding masked out
+    assert!(out.indices.iter().all(|&i| i < 1000));
+}
+
+#[test]
+fn batch_search_agrees_with_sequential() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(15_000, 209)));
+    let params = ActiveParams { tolerance: 1, ..Default::default() };
+    let engine = ActivePjrtEngine::new(ds, 1000, params, svc).unwrap();
+    let queries = generate_queries(20, 2, 210);
+    let batched = engine.batch_search(&queries, 11).unwrap();
+    assert_eq!(batched.len(), queries.len());
+    for (q, b) in queries.iter().zip(&batched) {
+        let single = engine.search(q, 11).unwrap();
+        assert_eq!(b.r, single.r, "final radius differs for {q:?}");
+        assert_eq!(b.n_inside, single.n_inside);
+        assert_eq!(b.trace.converged, single.trace.converged);
+    }
+    // batched classification runs end-to-end
+    let labels = engine.batch_classify(&queries, 11).unwrap();
+    assert_eq!(labels.len(), queries.len());
+    assert!(labels.iter().all(|&l| l < 3));
+}
+
+#[test]
+fn pjrt_engine_agrees_with_native_active() {
+    let Some(svc) = service() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(20_000, 207)));
+    let params = ActiveParams { tolerance: 1, ..Default::default() };
+    let native = ActiveEngine::new(ds.clone(), 1000, params.clone()).unwrap();
+    let pjrt = ActivePjrtEngine::new(ds, 1000, params, svc).unwrap();
+    for q in generate_queries(5, 2, 208) {
+        let a = native.knn(&q, 11).unwrap();
+        let b = pjrt.knn(&q, 11).unwrap();
+        let ia: Vec<u32> = a.iter().map(|n| n.id).collect();
+        let ib: Vec<u32> = b.iter().map(|n| n.id).collect();
+        assert_eq!(ia, ib, "query {q:?}");
+    }
+}
