@@ -154,6 +154,28 @@ pub struct RuntimeConfig {
     pub window_sizes: Vec<usize>,
 }
 
+/// `[resilience]` section — failure handling in the serving harness
+/// (see `coordinator::resilience`).
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Per-attempt engine deadline in milliseconds; 0 disables the
+    /// deadline guard (engine calls then run inline).
+    pub deadline_ms: u64,
+    /// Admitted-but-unfinished connection limit before the server
+    /// sheds with `ERR overload`; 0 = unlimited.
+    pub max_inflight: usize,
+    /// Retries per engine attempt for transient failures.
+    pub retry_max: u32,
+    /// Base backoff before the first retry (doubles per retry).
+    pub retry_backoff_us: u64,
+    /// Consecutive failures that trip an engine's circuit breaker.
+    pub breaker_threshold: u32,
+    /// Open-breaker cooldown before a half-open probe.
+    pub breaker_cooldown_ms: u64,
+    /// Whether engine failures fall through the fallback chain.
+    pub fallback: bool,
+}
+
 /// Top-level config.
 #[derive(Debug, Clone)]
 pub struct AsnnConfig {
@@ -163,6 +185,7 @@ pub struct AsnnConfig {
     pub engine: EngineKind,
     pub server: ServerConfig,
     pub runtime: RuntimeConfig,
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for AsnnConfig {
@@ -195,6 +218,15 @@ impl Default for AsnnConfig {
             runtime: RuntimeConfig {
                 artifacts_dir: "artifacts".into(),
                 window_sizes: vec![64, 128, 256, 512],
+            },
+            resilience: ResilienceConfig {
+                deadline_ms: 0,
+                max_inflight: 1024,
+                retry_max: 1,
+                retry_backoff_us: 500,
+                breaker_threshold: 5,
+                breaker_cooldown_ms: 1000,
+                fallback: true,
             },
         }
     }
@@ -253,6 +285,31 @@ impl AsnnConfig {
         cfg.server.batch_deadline_us =
             doc.int_or("server", "batch_deadline_us", cfg.server.batch_deadline_us as i64) as u64;
 
+        cfg.resilience.deadline_ms =
+            doc.int_or("resilience", "deadline_ms", cfg.resilience.deadline_ms as i64) as u64;
+        cfg.resilience.max_inflight =
+            doc.int_or("resilience", "max_inflight", cfg.resilience.max_inflight as i64)
+                as usize;
+        cfg.resilience.retry_max =
+            doc.int_or("resilience", "retry_max", cfg.resilience.retry_max as i64) as u32;
+        cfg.resilience.retry_backoff_us = doc.int_or(
+            "resilience",
+            "retry_backoff_us",
+            cfg.resilience.retry_backoff_us as i64,
+        ) as u64;
+        cfg.resilience.breaker_threshold = doc.int_or(
+            "resilience",
+            "breaker_threshold",
+            cfg.resilience.breaker_threshold as i64,
+        ) as u32;
+        cfg.resilience.breaker_cooldown_ms = doc.int_or(
+            "resilience",
+            "breaker_cooldown_ms",
+            cfg.resilience.breaker_cooldown_ms as i64,
+        ) as u64;
+        cfg.resilience.fallback =
+            doc.bool_or("resilience", "fallback", cfg.resilience.fallback);
+
         cfg.runtime.artifacts_dir =
             doc.str_or("runtime", "artifacts_dir", &cfg.runtime.artifacts_dir);
         if let Some(arr) = doc.get("runtime", "window_sizes").and_then(|v| v.as_array()) {
@@ -304,6 +361,16 @@ impl AsnnConfig {
         }
         if self.runtime.window_sizes.is_empty() {
             return Err(AsnnError::Config("runtime.window_sizes must be non-empty".into()));
+        }
+        if self.resilience.breaker_threshold == 0 {
+            return Err(AsnnError::Config(
+                "resilience.breaker_threshold must be > 0".into(),
+            ));
+        }
+        if self.resilience.breaker_cooldown_ms == 0 {
+            return Err(AsnnError::Config(
+                "resilience.breaker_cooldown_ms must be > 0".into(),
+            ));
         }
         Ok(())
     }
@@ -358,6 +425,37 @@ mod tests {
         assert!(AsnnConfig::from_toml("[search]\nmetric = \"l7\"").is_err());
         assert!(AsnnConfig::from_toml("[grid]\nresolution = 2").is_err());
         assert!(AsnnConfig::from_toml("[data]\nn = 5\n[search]\nk = 11").is_err());
+        assert!(AsnnConfig::from_toml("[resilience]\nbreaker_threshold = 0").is_err());
+        assert!(AsnnConfig::from_toml("[resilience]\nbreaker_cooldown_ms = 0").is_err());
+    }
+
+    #[test]
+    fn resilience_section_defaults_and_overrides() {
+        let c = AsnnConfig::default();
+        assert_eq!(c.resilience.deadline_ms, 0); // deadline off by default
+        assert!(c.resilience.fallback);
+        c.validate().unwrap();
+
+        let c = AsnnConfig::from_toml(
+            r#"
+            [resilience]
+            deadline_ms = 250
+            max_inflight = 64
+            retry_max = 3
+            retry_backoff_us = 1000
+            breaker_threshold = 7
+            breaker_cooldown_ms = 2000
+            fallback = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.resilience.deadline_ms, 250);
+        assert_eq!(c.resilience.max_inflight, 64);
+        assert_eq!(c.resilience.retry_max, 3);
+        assert_eq!(c.resilience.retry_backoff_us, 1000);
+        assert_eq!(c.resilience.breaker_threshold, 7);
+        assert_eq!(c.resilience.breaker_cooldown_ms, 2000);
+        assert!(!c.resilience.fallback);
     }
 
     #[test]

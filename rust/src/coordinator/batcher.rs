@@ -5,8 +5,15 @@
 //! The coordinator uses this to feed same-window-scale queries into the
 //! `disk_count_w*_b16` PJRT artifacts — the paper's serial loop,
 //! vectorized across concurrent clients.
+//!
+//! A `process` closure that panics is caught and counted: the batch is
+//! lost but the batcher thread survives, later batches still flush,
+//! and `Drop` joins cleanly instead of wedging.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -15,6 +22,7 @@ use std::time::{Duration, Instant};
 pub struct Batcher<T: Send + 'static> {
     tx: Option<Sender<T>>,
     handle: Option<JoinHandle<()>>,
+    panics: Arc<AtomicU64>,
 }
 
 impl<T: Send + 'static> Batcher<T> {
@@ -26,9 +34,18 @@ impl<T: Send + 'static> Batcher<T> {
         assert!(batch_max > 0);
         let (tx, rx) = channel::<T>();
         let mut process = process;
+        let panics = Arc::new(AtomicU64::new(0));
+        let panics2 = Arc::clone(&panics);
         let handle = std::thread::Builder::new()
             .name("asnn-batcher".into())
             .spawn(move || {
+                // isolate process() panics: drop the poisoned batch,
+                // keep the batcher thread (and Drop's join) alive
+                let mut run = move |batch: Vec<T>| {
+                    if catch_unwind(AssertUnwindSafe(|| process(batch))).is_err() {
+                        panics2.fetch_add(1, Ordering::Relaxed);
+                    }
+                };
                 loop {
                     // block for the first item of a batch
                     let first = match rx.recv() {
@@ -46,16 +63,16 @@ impl<T: Send + 'static> Batcher<T> {
                             Ok(item) => batch.push(item),
                             Err(RecvTimeoutError::Timeout) => break,
                             Err(RecvTimeoutError::Disconnected) => {
-                                process(batch);
+                                run(batch);
                                 return;
                             }
                         }
                     }
-                    process(batch);
+                    run(batch);
                 }
             })
             .expect("spawn batcher");
-        Self { tx: Some(tx), handle: Some(handle) }
+        Self { tx: Some(tx), handle: Some(handle), panics }
     }
 
     /// Submit one item; returns false if the batcher has shut down.
@@ -64,6 +81,11 @@ impl<T: Send + 'static> Batcher<T> {
             Some(tx) => tx.send(item).is_ok(),
             None => false,
         }
+    }
+
+    /// Batches lost to a panicking `process` closure.
+    pub fn panics_caught(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
     }
 }
 
@@ -141,5 +163,47 @@ mod tests {
         let (tx, _) = std::sync::mpsc::channel::<u32>();
         drop(tx);
         // nothing to assert beyond the drop path not hanging
+    }
+
+    #[test]
+    fn in_flight_items_flushed_exactly_once_when_senders_drop() {
+        // items still queued at drop time must be flushed exactly once
+        // (no loss, no duplication) before the Drop join returns
+        let (b, sink) = collect_batches(7, 500);
+        for i in 0..50 {
+            assert!(b.submit(i));
+        }
+        drop(b); // long deadline: most items are in flight right now
+        let batches = sink.lock().unwrap();
+        let mut all: Vec<u32> = batches.iter().flatten().copied().collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all, (0..50).collect::<Vec<_>>(), "lost or duplicated items");
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 50, "some item was delivered twice");
+    }
+
+    #[test]
+    fn panicking_process_does_not_wedge_drop() {
+        let sink: Arc<Mutex<Vec<u32>>> = Arc::new(Mutex::new(Vec::new()));
+        let s = Arc::clone(&sink);
+        let b = Batcher::new(1, Duration::from_millis(5), move |batch: Vec<u32>| {
+            if batch.contains(&13) {
+                panic!("poisoned batch");
+            }
+            s.lock().unwrap().extend(batch);
+        });
+        for i in [1u32, 13, 2] {
+            assert!(b.submit(i));
+        }
+        // wait for the poisoned batch to be consumed, then keep going
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(b.submit(3), "batcher died after a process panic");
+        let panics = b.panics_caught();
+        drop(b); // must join, not wedge
+        assert_eq!(panics, 1);
+        let mut got = sink.lock().unwrap().clone();
+        got.sort();
+        assert_eq!(got, vec![1, 2, 3], "post-panic batches were lost");
     }
 }

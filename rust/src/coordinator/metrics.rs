@@ -14,6 +14,16 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub batched_queries: AtomicU64,
+    // resilience counters
+    pub accept_errors: AtomicU64,
+    pub shed: AtomicU64,
+    pub timeouts: AtomicU64,
+    pub retries: AtomicU64,
+    pub breaker_trips: AtomicU64,
+    pub fallbacks: AtomicU64,
+    pub panics: AtomicU64,
+    /// Gauge: connections admitted and not yet finished.
+    inflight: AtomicU64,
     knn_latency: Mutex<LatencyHistogram>,
     classify_latency: Mutex<LatencyHistogram>,
 }
@@ -26,6 +36,13 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub batches: u64,
     pub batched_queries: u64,
+    pub accept_errors: u64,
+    pub shed: u64,
+    pub timeouts: u64,
+    pub retries: u64,
+    pub breaker_trips: u64,
+    pub fallbacks: u64,
+    pub panics: u64,
     pub knn_mean_us: f64,
     pub knn_p50_us: f64,
     pub knn_p99_us: f64,
@@ -57,6 +74,54 @@ impl Metrics {
         self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Failed `accept()` on the listener socket.
+    pub fn record_accept_error(&self) {
+        self.accept_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Connection rejected by admission control (queue full).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Engine call exceeded its per-request deadline.
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Transient engine failure retried with backoff.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A circuit breaker tripped open.
+    pub fn record_trip(&self) {
+        self.breaker_trips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was served by a fallback engine, not the one asked for.
+    pub fn record_fallback(&self) {
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A panic caught and isolated (worker pool job or engine call).
+    pub fn record_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn enter_inflight(&self) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn exit_inflight(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Current admitted-but-unfinished connection count (queue depth).
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let knn = self.knn_latency.lock().unwrap().clone();
         let cls = self.classify_latency.lock().unwrap().clone();
@@ -66,6 +131,13 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_queries: self.batched_queries.load(Ordering::Relaxed),
+            accept_errors: self.accept_errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
             knn_mean_us: knn.mean_ns() / 1e3,
             knn_p50_us: knn.quantile_ns(0.5) as f64 / 1e3,
             knn_p99_us: knn.quantile_ns(0.99) as f64 / 1e3,
@@ -80,6 +152,8 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "knn={} classify={} errors={} batches={} batched={} \
+             accept_errors={} shed={} timeouts={} retries={} trips={} \
+             fallbacks={} panics={} \
              knn_mean_us={:.1} knn_p50_us={:.1} knn_p99_us={:.1} \
              classify_mean_us={:.1} classify_p99_us={:.1}",
             self.knn_requests,
@@ -87,6 +161,13 @@ impl MetricsSnapshot {
             self.errors,
             self.batches,
             self.batched_queries,
+            self.accept_errors,
+            self.shed,
+            self.timeouts,
+            self.retries,
+            self.breaker_trips,
+            self.fallbacks,
+            self.panics,
             self.knn_mean_us,
             self.knn_p50_us,
             self.knn_p99_us,
@@ -123,6 +204,35 @@ mod tests {
         m.record_knn(1_000_000);
         let text = m.snapshot().render();
         for field in ["knn=", "classify=", "errors=", "knn_p99_us="] {
+            assert!(text.contains(field), "{text}");
+        }
+    }
+
+    #[test]
+    fn resilience_counters_and_gauge() {
+        let m = Metrics::new();
+        m.record_accept_error();
+        m.record_shed();
+        m.record_timeout();
+        m.record_retry();
+        m.record_retry();
+        m.record_trip();
+        m.record_fallback();
+        m.record_panic();
+        m.enter_inflight();
+        m.enter_inflight();
+        m.exit_inflight();
+        let s = m.snapshot();
+        assert_eq!(s.accept_errors, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.fallbacks, 1);
+        assert_eq!(s.panics, 1);
+        assert_eq!(m.inflight(), 1);
+        let text = s.render();
+        for field in ["shed=1", "timeouts=1", "trips=1", "fallbacks=1", "panics=1"] {
             assert!(text.contains(field), "{text}");
         }
     }

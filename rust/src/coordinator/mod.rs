@@ -1,24 +1,44 @@
 //! L3 serving coordinator: the production wrapper around the engines.
 //!
 //! ```text
-//! TCP clients ──► server (line protocol) ──► router ──► engine
-//!                     │                        │
-//!                     └── metrics ◄────────────┘
-//!                     └── batcher (groups same-window PJRT queries)
+//! TCP clients ──► server ──► admission control ──► worker pool
+//!                   │         (shed + ERR overload   (panic-isolated:
+//!                   │          when queue ≥ limit)    catch_unwind +
+//!                   │                                 respawn backstop)
+//!                   │                                      │
+//!                   │                                      ▼
+//!                   │                                   router
+//!                   │                                      │
+//!                   │              ┌───────────────────────┤
+//!                   │              ▼                       ▼
+//!                   │      circuit breakers        deadline + retry
+//!                   │      (per engine, trip       (per-attempt budget,
+//!                   │       after N failures)       backoff on faults)
+//!                   │              │                       │
+//!                   │              └───────► engine fallback chain
+//!                   │                 (active_pjrt → active → kdtree → brute)
+//!                   │
+//!                   ├── metrics ◄── trips / sheds / fallbacks / panics
+//!                   └── batcher (groups same-window PJRT queries)
 //! ```
 //!
 //! Everything is std-only (tokio is not in the offline vendor set):
 //! a thread-pool accept loop, `mpsc`-based batching, and atomic
-//! counters + a mutexed latency histogram for metrics.
+//! counters + a mutexed latency histogram for metrics. The
+//! [`resilience`] module holds the failure-handling primitives; the
+//! [`crate::engine::chaos`] engine injects faults so every path above
+//! is testable end-to-end (see `tests/chaos_e2e.rs`).
 
 pub mod batcher;
 pub mod metrics;
 pub mod protocol;
+pub mod resilience;
 pub mod router;
 pub mod server;
 pub mod worker;
 
 pub use metrics::Metrics;
 pub use protocol::{Request, Response};
+pub use resilience::{CircuitBreaker, ResiliencePolicy};
 pub use router::Router;
 pub use server::Server;

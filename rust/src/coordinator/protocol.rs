@@ -5,9 +5,13 @@
 //! KNN <k> <x> <y> [engine]        → OK <id>:<dist>:<label> ...
 //! CLASSIFY <k> <x> <y> [engine]   → OK <label>
 //! STATS                           → OK <metrics text, one line>
+//! HEALTH                          → OK status=... engines=... breakers=... queue_depth=N
 //! PING                            → OK pong
 //! QUIT                            → closes the connection
 //! ```
+//! `HEALTH` is for load-balancer readiness probes: it reports the
+//! registered engines, each circuit breaker's state, and the current
+//! queue depth without touching any engine.
 //! Errors: `ERR <domain> <message>`.
 
 use crate::engine::Neighbor;
@@ -19,6 +23,7 @@ pub enum Request {
     Knn { k: usize, x: f64, y: f64, engine: Option<String> },
     Classify { k: usize, x: f64, y: f64, engine: Option<String> },
     Stats,
+    Health,
     Ping,
     Quit,
 }
@@ -60,6 +65,7 @@ impl Request {
                 Ok(Request::Classify { k, x, y, engine })
             }
             "STATS" => Ok(Request::Stats),
+            "HEALTH" => Ok(Request::Health),
             "PING" => Ok(Request::Ping),
             "QUIT" => Ok(Request::Quit),
             other => Err(AsnnError::Protocol(format!("unknown verb {other:?}"))),
@@ -78,6 +84,7 @@ impl Request {
                 None => format!("CLASSIFY {k} {x} {y}"),
             },
             Request::Stats => "STATS".into(),
+            Request::Health => "HEALTH".into(),
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),
         }
@@ -178,7 +185,10 @@ mod tests {
     fn control_verbs() {
         assert_eq!(Request::parse("PING").unwrap(), Request::Ping);
         assert_eq!(Request::parse("STATS").unwrap(), Request::Stats);
+        assert_eq!(Request::parse("HEALTH").unwrap(), Request::Health);
+        assert_eq!(Request::parse("health").unwrap(), Request::Health);
         assert_eq!(Request::parse("QUIT").unwrap(), Request::Quit);
+        assert_eq!(Request::parse(&Request::Health.format()).unwrap(), Request::Health);
     }
 
     #[test]

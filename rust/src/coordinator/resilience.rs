@@ -1,0 +1,317 @@
+//! Resilience primitives for the serving coordinator: retry policies
+//! with exponential backoff, per-engine circuit breakers, and the
+//! error taxonomy that decides which failures are worth retrying or
+//! falling back on.
+//!
+//! The router composes these into a degradation ladder: a failing
+//! engine is retried (transient faults), then its breaker absorbs the
+//! failure (consecutive faults trip it open), and the request falls
+//! through the fallback chain until an engine answers. An open breaker
+//! lets a single half-open probe through after a cooldown, so a healed
+//! engine rejoins the chain without a thundering herd.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::ResilienceConfig;
+use crate::error::AsnnError;
+
+/// Retry-with-backoff policy for transient engine failures.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Additional attempts after the first (0 = no retries).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles each further attempt.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_retries: 0, backoff: Duration::from_micros(500) }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff to sleep before retry number `attempt` (0-based).
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        self.backoff.saturating_mul(1u32 << attempt.min(16))
+    }
+}
+
+/// Circuit-breaker tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerPolicy {
+    /// Consecutive failures that trip the breaker open.
+    pub threshold: u32,
+    /// How long the breaker stays open before a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        Self { threshold: 5, cooldown: Duration::from_secs(1) }
+    }
+}
+
+/// Observable breaker state (for HEALTH probes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Inner {
+    Closed { consecutive_failures: u32 },
+    Open { since: Instant },
+    /// A probe request is in flight; `since` lets a lost probe expire.
+    HalfOpen { since: Instant },
+}
+
+/// Per-engine circuit breaker. All methods take `&self`; state lives
+/// behind a mutex and every transition is a single short critical
+/// section, so the breaker is safe to share across worker threads.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    policy: BreakerPolicy,
+    inner: Mutex<Inner>,
+}
+
+impl CircuitBreaker {
+    pub fn new(policy: BreakerPolicy) -> Self {
+        Self { policy, inner: Mutex::new(Inner::Closed { consecutive_failures: 0 }) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// May this request use the guarded engine right now? An open
+    /// breaker admits one probe per cooldown window.
+    pub fn allow(&self) -> bool {
+        let mut g = self.lock();
+        match &*g {
+            Inner::Closed { .. } => true,
+            Inner::Open { since } => {
+                if since.elapsed() >= self.policy.cooldown {
+                    *g = Inner::HalfOpen { since: Instant::now() };
+                    true
+                } else {
+                    false
+                }
+            }
+            Inner::HalfOpen { since } => {
+                // probe presumed lost after a full cooldown: allow another
+                if since.elapsed() >= self.policy.cooldown {
+                    *g = Inner::HalfOpen { since: Instant::now() };
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    pub fn record_success(&self) {
+        *self.lock() = Inner::Closed { consecutive_failures: 0 };
+    }
+
+    /// Record a failure; returns `true` when this failure trips the
+    /// breaker open (closed → open or a failed half-open probe).
+    pub fn record_failure(&self) -> bool {
+        let mut g = self.lock();
+        match &mut *g {
+            Inner::Closed { consecutive_failures } => {
+                *consecutive_failures += 1;
+                if *consecutive_failures >= self.policy.threshold {
+                    *g = Inner::Open { since: Instant::now() };
+                    true
+                } else {
+                    false
+                }
+            }
+            Inner::HalfOpen { .. } => {
+                *g = Inner::Open { since: Instant::now() };
+                true
+            }
+            Inner::Open { .. } => false,
+        }
+    }
+
+    /// Non-mutating peek (an expired cooldown still reports `Open`
+    /// until a request actually probes it).
+    pub fn state(&self) -> BreakerState {
+        match &*self.lock() {
+            Inner::Closed { .. } => BreakerState::Closed,
+            Inner::Open { .. } => BreakerState::Open,
+            Inner::HalfOpen { .. } => BreakerState::HalfOpen,
+        }
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.state() == BreakerState::Open
+    }
+
+    pub fn state_name(&self) -> &'static str {
+        self.state().name()
+    }
+}
+
+/// The router's full resilience policy.
+#[derive(Debug, Clone, Copy)]
+pub struct ResiliencePolicy {
+    /// Per-attempt engine deadline; `None` disables deadline guarding
+    /// (the engine call then runs inline on the worker thread).
+    pub deadline: Option<Duration>,
+    pub retry: RetryPolicy,
+    pub breaker: BreakerPolicy,
+    /// Whether engine failures fall through the fallback chain.
+    pub fallback_enabled: bool,
+}
+
+impl Default for ResiliencePolicy {
+    fn default() -> Self {
+        Self {
+            deadline: None,
+            retry: RetryPolicy::default(),
+            breaker: BreakerPolicy::default(),
+            fallback_enabled: true,
+        }
+    }
+}
+
+impl ResiliencePolicy {
+    /// Build from the `[resilience]` config section.
+    pub fn from_config(cfg: &ResilienceConfig) -> Self {
+        Self {
+            deadline: (cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms)),
+            retry: RetryPolicy {
+                max_retries: cfg.retry_max,
+                backoff: Duration::from_micros(cfg.retry_backoff_us),
+            },
+            breaker: BreakerPolicy {
+                threshold: cfg.breaker_threshold,
+                cooldown: Duration::from_millis(cfg.breaker_cooldown_ms),
+            },
+            fallback_enabled: cfg.fallback,
+        }
+    }
+}
+
+/// Errors caused by the request itself: no engine will do better, so
+/// they are returned immediately without retry, breaker penalty, or
+/// fallback.
+pub fn is_client_error(e: &AsnnError) -> bool {
+    matches!(e, AsnnError::Query(_) | AsnnError::Protocol(_) | AsnnError::Config(_))
+}
+
+/// Errors worth retrying on the same engine (transient runtime / I/O
+/// faults). Timeouts are deliberately not retryable: the engine is
+/// already slower than the budget, so the request falls back instead.
+pub fn is_retryable(e: &AsnnError) -> bool {
+    matches!(e, AsnnError::Runtime(_) | AsnnError::Io(_) | AsnnError::Coordinator(_))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(threshold: u32, cooldown_ms: u64) -> BreakerPolicy {
+        BreakerPolicy { threshold, cooldown: Duration::from_millis(cooldown_ms) }
+    }
+
+    #[test]
+    fn trips_after_consecutive_failures() {
+        let b = CircuitBreaker::new(policy(3, 1000));
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert!(b.record_failure()); // third failure trips
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow());
+        assert!(!b.record_failure()); // already open: no second trip
+    }
+
+    #[test]
+    fn success_resets_failure_count() {
+        let b = CircuitBreaker::new(policy(2, 1000));
+        assert!(!b.record_failure());
+        b.record_success();
+        assert!(!b.record_failure()); // count restarted
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn half_open_probe_after_cooldown() {
+        let b = CircuitBreaker::new(policy(1, 20));
+        assert!(b.record_failure());
+        assert!(!b.allow()); // still cooling down
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.allow()); // the probe
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow()); // only one probe per window
+    }
+
+    #[test]
+    fn probe_outcome_closes_or_reopens() {
+        let b = CircuitBreaker::new(policy(1, 10));
+        b.record_failure();
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.allow());
+        assert!(b.record_failure()); // failed probe re-trips
+        assert_eq!(b.state(), BreakerState::Open);
+
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.allow());
+        b.record_success(); // healed
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt() {
+        let r = RetryPolicy { max_retries: 3, backoff: Duration::from_millis(2) };
+        assert_eq!(r.backoff_for(0), Duration::from_millis(2));
+        assert_eq!(r.backoff_for(1), Duration::from_millis(4));
+        assert_eq!(r.backoff_for(2), Duration::from_millis(8));
+    }
+
+    #[test]
+    fn error_taxonomy() {
+        assert!(is_client_error(&AsnnError::Query("k=0".into())));
+        assert!(!is_client_error(&AsnnError::Runtime("pjrt".into())));
+        assert!(is_retryable(&AsnnError::Runtime("pjrt".into())));
+        assert!(!is_retryable(&AsnnError::Timeout("slow".into())));
+        assert!(!is_retryable(&AsnnError::Query("k=0".into())));
+    }
+
+    #[test]
+    fn policy_from_config() {
+        let cfg = ResilienceConfig {
+            deadline_ms: 250,
+            max_inflight: 64,
+            retry_max: 2,
+            retry_backoff_us: 100,
+            breaker_threshold: 7,
+            breaker_cooldown_ms: 500,
+            fallback: false,
+        };
+        let p = ResiliencePolicy::from_config(&cfg);
+        assert_eq!(p.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(p.retry.max_retries, 2);
+        assert_eq!(p.breaker.threshold, 7);
+        assert!(!p.fallback_enabled);
+        let disabled = ResilienceConfig { deadline_ms: 0, ..cfg };
+        assert_eq!(ResiliencePolicy::from_config(&disabled).deadline, None);
+    }
+}

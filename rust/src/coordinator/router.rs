@@ -1,29 +1,102 @@
-//! Request router: owns the engine set and dispatches each request to
-//! the default engine or a per-request override.
+//! Request router: owns the engine set and dispatches each request
+//! through the resilience ladder — per-engine circuit breakers,
+//! per-attempt deadlines, retry with backoff for transient faults, and
+//! a fallback chain that degrades gracefully toward brute force.
+//!
+//! Engine *failures* (runtime errors, panics, deadline overruns) walk
+//! the chain; *client* errors (bad k, unknown engine) are returned
+//! immediately — no other engine can fix a malformed request.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
-use crate::engine::NnEngine;
+use super::resilience::{is_client_error, is_retryable, CircuitBreaker, ResiliencePolicy};
+use crate::engine::{Neighbor, NnEngine};
 use crate::error::{AsnnError, Result};
 use crate::util::timer::Timer;
+
+/// Default degradation order: most specialised engine first, exact
+/// brute-force scan as the engine of last resort.
+pub const DEFAULT_FALLBACK_CHAIN: [&str; 4] = ["active-pjrt", "active", "kdtree", "brute"];
 
 /// Engine registry + dispatch policy.
 pub struct Router {
     engines: HashMap<String, Arc<dyn NnEngine>>,
+    breakers: HashMap<String, CircuitBreaker>,
+    fallback_chain: Vec<String>,
+    policy: ResiliencePolicy,
     default_engine: String,
     metrics: Arc<Metrics>,
 }
 
+/// The engine-facing part of a request (small and `Copy` so it can be
+/// re-sent to fallback engines and moved into deadline threads).
+#[derive(Debug, Clone, Copy)]
+enum Query {
+    Knn { k: usize, x: f64, y: f64 },
+    Classify { k: usize, x: f64, y: f64 },
+}
+
+enum Outcome {
+    Hits(Vec<Neighbor>),
+    Label(u16),
+}
+
+fn run_query(engine: &dyn NnEngine, q: Query) -> Result<Outcome> {
+    match q {
+        Query::Knn { k, x, y } => engine.knn(&[x, y], k).map(Outcome::Hits),
+        Query::Classify { k, x, y } => engine.classify(&[x, y], k).map(Outcome::Label),
+    }
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".into()
+    }
+}
+
 impl Router {
     pub fn new(default_engine: impl Into<String>, metrics: Arc<Metrics>) -> Self {
-        Self { engines: HashMap::new(), default_engine: default_engine.into(), metrics }
+        Self::with_policy(default_engine, metrics, ResiliencePolicy::default())
+    }
+
+    pub fn with_policy(
+        default_engine: impl Into<String>,
+        metrics: Arc<Metrics>,
+        policy: ResiliencePolicy,
+    ) -> Self {
+        Self {
+            engines: HashMap::new(),
+            breakers: HashMap::new(),
+            fallback_chain: DEFAULT_FALLBACK_CHAIN.iter().map(|s| s.to_string()).collect(),
+            policy,
+            default_engine: default_engine.into(),
+            metrics,
+        }
     }
 
     pub fn register(&mut self, name: impl Into<String>, engine: Arc<dyn NnEngine>) {
-        self.engines.insert(name.into(), engine);
+        let name = name.into();
+        self.breakers.insert(name.clone(), CircuitBreaker::new(self.policy.breaker));
+        self.engines.insert(name, engine);
+    }
+
+    /// Override the default degradation order (names absent from the
+    /// registry are skipped at dispatch time).
+    pub fn set_fallback_chain(&mut self, chain: Vec<String>) {
+        self.fallback_chain = chain;
+    }
+
+    pub fn policy(&self) -> &ResiliencePolicy {
+        &self.policy
     }
 
     pub fn engine_names(&self) -> Vec<String> {
@@ -32,18 +105,16 @@ impl Router {
         v
     }
 
-    pub fn metrics(&self) -> &Arc<Metrics> {
-        &self.metrics
+    /// Breaker state per engine, sorted by name (for HEALTH probes).
+    pub fn breaker_states(&self) -> Vec<(String, &'static str)> {
+        let mut v: Vec<(String, &'static str)> =
+            self.breakers.iter().map(|(n, b)| (n.clone(), b.state_name())).collect();
+        v.sort();
+        v
     }
 
-    fn pick(&self, name: Option<&str>) -> Result<&Arc<dyn NnEngine>> {
-        let name = name.unwrap_or(&self.default_engine);
-        self.engines.get(name).ok_or_else(|| {
-            AsnnError::Coordinator(format!(
-                "unknown engine {name:?} (have: {})",
-                self.engine_names().join(", ")
-            ))
-        })
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
     }
 
     /// Handle one request, recording metrics. Never panics; protocol
@@ -51,44 +122,184 @@ impl Router {
     pub fn handle(&self, req: &Request) -> Response {
         match req {
             Request::Knn { k, x, y, engine } => {
-                let t = Timer::new();
-                match self.pick(engine.as_deref()).and_then(|e| e.knn(&[*x, *y], *k)) {
-                    Ok(hits) => {
-                        self.metrics.record_knn(t.elapsed_ns());
-                        Response::Neighbors(hits)
-                    }
-                    Err(e) => {
-                        self.metrics.record_error();
-                        Response::from_error(&e)
-                    }
-                }
+                self.dispatch(Query::Knn { k: *k, x: *x, y: *y }, engine.as_deref())
             }
             Request::Classify { k, x, y, engine } => {
-                let t = Timer::new();
-                match self.pick(engine.as_deref()).and_then(|e| e.classify(&[*x, *y], *k)) {
-                    Ok(label) => {
-                        self.metrics.record_classify(t.elapsed_ns());
-                        Response::Label(label)
-                    }
-                    Err(e) => {
-                        self.metrics.record_error();
-                        Response::from_error(&e)
-                    }
-                }
+                self.dispatch(Query::Classify { k: *k, x: *x, y: *y }, engine.as_deref())
             }
             Request::Stats => Response::Text(self.metrics.snapshot().render()),
+            Request::Health => Response::Text(self.health_line()),
             Request::Ping => Response::Text("pong".into()),
             Request::Quit => Response::Text("bye".into()),
         }
+    }
+
+    /// One-line readiness report: overall status, default engine,
+    /// queue depth, engine set, and per-engine breaker states.
+    fn health_line(&self) -> String {
+        let breakers: Vec<String> = self
+            .breaker_states()
+            .into_iter()
+            .map(|(n, s)| format!("{n}:{s}"))
+            .collect();
+        let default_open = self
+            .breakers
+            .get(&self.default_engine)
+            .map(|b| b.is_open())
+            .unwrap_or(true);
+        format!(
+            "status={} default={} queue_depth={} engines={} breakers={}",
+            if default_open { "degraded" } else { "ok" },
+            self.default_engine,
+            self.metrics.inflight(),
+            self.engine_names().join(","),
+            breakers.join(","),
+        )
+    }
+
+    /// The engines this request may use, in order: the requested one,
+    /// then (if fallback is enabled) the registered chain entries.
+    fn chain_for<'a>(&'a self, requested: &'a str) -> Vec<&'a str> {
+        let mut chain = vec![requested];
+        if self.policy.fallback_enabled {
+            for name in &self.fallback_chain {
+                if name != requested && self.engines.contains_key(name) {
+                    chain.push(name.as_str());
+                }
+            }
+        }
+        chain
+    }
+
+    /// One engine attempt, guarded: panics are caught and surfaced as
+    /// runtime errors; with a deadline set, the call runs on a helper
+    /// thread and is abandoned (thread detaches, result discarded) if
+    /// it overruns.
+    fn guarded(&self, engine: &Arc<dyn NnEngine>, q: Query) -> Result<Outcome> {
+        match self.policy.deadline {
+            None => catch_unwind(AssertUnwindSafe(|| run_query(engine.as_ref(), q)))
+                .unwrap_or_else(|p| {
+                    self.metrics.record_panic();
+                    Err(AsnnError::Runtime(format!("engine panicked: {}", panic_message(p))))
+                }),
+            Some(deadline) => {
+                let (tx, rx) = channel();
+                let engine = Arc::clone(engine);
+                std::thread::Builder::new()
+                    .name("asnn-deadline".into())
+                    .spawn(move || {
+                        let r = catch_unwind(AssertUnwindSafe(|| run_query(engine.as_ref(), q)))
+                            .unwrap_or_else(|p| {
+                                Err(AsnnError::Runtime(format!(
+                                    "engine panicked: {}",
+                                    panic_message(p)
+                                )))
+                            });
+                        let _ = tx.send(r);
+                    })
+                    .map_err(|e| {
+                        AsnnError::Coordinator(format!("spawn deadline thread: {e}"))
+                    })?;
+                match rx.recv_timeout(deadline) {
+                    Ok(r) => {
+                        if let Err(e) = &r {
+                            if matches!(e, AsnnError::Runtime(m) if m.starts_with("engine panicked")) {
+                                self.metrics.record_panic();
+                            }
+                        }
+                        r
+                    }
+                    Err(_) => {
+                        self.metrics.record_timeout();
+                        Err(AsnnError::Timeout(format!(
+                            "engine exceeded {}ms deadline",
+                            deadline.as_millis()
+                        )))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Guarded attempt plus retry-with-backoff for transient failures.
+    fn attempt(&self, engine: &Arc<dyn NnEngine>, q: Query) -> Result<Outcome> {
+        let mut attempt = 0;
+        loop {
+            match self.guarded(engine, q) {
+                Ok(out) => return Ok(out),
+                Err(e) if is_retryable(&e) && attempt < self.policy.retry.max_retries => {
+                    self.metrics.record_retry();
+                    std::thread::sleep(self.policy.retry.backoff_for(attempt));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn dispatch(&self, q: Query, engine_override: Option<&str>) -> Response {
+        let requested = engine_override.unwrap_or(&self.default_engine);
+        if !self.engines.contains_key(requested) {
+            self.metrics.record_error();
+            return Response::from_error(&AsnnError::Coordinator(format!(
+                "unknown engine {requested:?} (have: {})",
+                self.engine_names().join(", ")
+            )));
+        }
+        let t = Timer::new();
+        let mut last_err: Option<AsnnError> = None;
+        for name in self.chain_for(requested) {
+            let breaker = &self.breakers[name];
+            if !breaker.allow() {
+                continue; // circuit open: skip without spending an attempt
+            }
+            match self.attempt(&self.engines[name], q) {
+                Ok(out) => {
+                    breaker.record_success();
+                    if name != requested {
+                        self.metrics.record_fallback();
+                    }
+                    return match out {
+                        Outcome::Hits(hits) => {
+                            self.metrics.record_knn(t.elapsed_ns());
+                            Response::Neighbors(hits)
+                        }
+                        Outcome::Label(label) => {
+                            self.metrics.record_classify(t.elapsed_ns());
+                            Response::Label(label)
+                        }
+                    };
+                }
+                Err(e) if is_client_error(&e) => {
+                    // the request itself is bad; no engine will do better
+                    self.metrics.record_error();
+                    return Response::from_error(&e);
+                }
+                Err(e) => {
+                    if breaker.record_failure() {
+                        self.metrics.record_trip();
+                    }
+                    last_err = Some(e);
+                }
+            }
+        }
+        self.metrics.record_error();
+        let err = last_err.unwrap_or_else(|| {
+            AsnnError::Coordinator("no engine available: all circuits open".into())
+        });
+        Response::from_error(&err)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::resilience::{BreakerPolicy, RetryPolicy};
     use crate::data::synthetic::{generate, SyntheticSpec};
-    use crate::engine::brute::BruteEngine;
     use crate::engine::active::{ActiveEngine, ActiveParams};
+    use crate::engine::brute::BruteEngine;
+    use crate::engine::chaos::ChaosEngine;
+    use std::time::Duration;
 
     fn router() -> Router {
         let ds = Arc::new(generate(&SyntheticSpec::paper_default(2000, 91)));
@@ -148,6 +359,139 @@ mod tests {
         let r = router();
         match r.handle(&Request::Knn { k: 0, x: 0.5, y: 0.5, engine: None }) {
             Response::Error { domain, .. } => assert_eq!(domain, "query"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn client_errors_do_not_fall_back_or_trip() {
+        // bad k through a healthy chain: query error returned as-is,
+        // breakers untouched, no fallback recorded
+        let r = router();
+        match r.handle(&Request::Knn { k: 0, x: 0.5, y: 0.5, engine: Some("active".into()) }) {
+            Response::Error { domain, .. } => assert_eq!(domain, "query"),
+            other => panic!("{other:?}"),
+        }
+        let s = r.metrics().snapshot();
+        assert_eq!(s.fallbacks, 0);
+        assert_eq!(s.breaker_trips, 0);
+        assert!(r.breaker_states().iter().all(|(_, s)| *s == "closed"));
+    }
+
+    #[test]
+    fn failing_engine_falls_back_and_trips_breaker() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 92)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let policy = ResiliencePolicy {
+            breaker: BreakerPolicy { threshold: 3, cooldown: Duration::from_secs(60) },
+            ..ResiliencePolicy::default()
+        };
+        let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
+        r.register("chaos", Arc::new(ChaosEngine::failing(Arc::clone(&brute), 7)));
+        r.register("brute", brute);
+        r.set_fallback_chain(vec!["brute".into()]);
+
+        for _ in 0..5 {
+            match r.handle(&Request::Knn { k: 4, x: 0.5, y: 0.5, engine: None }) {
+                Response::Neighbors(hits) => assert_eq!(hits.len(), 4),
+                other => panic!("{other:?}"),
+            }
+        }
+        let s = r.metrics().snapshot();
+        assert_eq!(s.fallbacks, 5);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.errors, 0);
+        assert!(r
+            .breaker_states()
+            .iter()
+            .any(|(n, st)| n == "chaos" && *st == "open"));
+    }
+
+    #[test]
+    fn panicking_engine_is_isolated() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 93)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let mut r = Router::new("chaos", Arc::new(Metrics::new()));
+        r.register("chaos", Arc::new(ChaosEngine::panicking(Arc::clone(&brute), 8)));
+        r.register("brute", brute);
+        r.set_fallback_chain(vec!["brute".into()]);
+        match r.handle(&Request::Classify { k: 5, x: 0.4, y: 0.4, engine: None }) {
+            Response::Label(l) => assert!(l < 3),
+            other => panic!("{other:?}"),
+        }
+        let s = r.metrics().snapshot();
+        assert_eq!(s.panics, 1);
+        assert_eq!(s.fallbacks, 1);
+    }
+
+    #[test]
+    fn deadline_converts_slow_engine_to_timeout() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 94)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let policy = ResiliencePolicy {
+            deadline: Some(Duration::from_millis(25)),
+            fallback_enabled: false,
+            ..ResiliencePolicy::default()
+        };
+        let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
+        r.register(
+            "chaos",
+            Arc::new(ChaosEngine::slow(brute, Duration::from_millis(300), 9)),
+        );
+        match r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }) {
+            Response::Error { domain, .. } => assert_eq!(domain, "timeout"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(r.metrics().snapshot().timeouts, 1);
+    }
+
+    #[test]
+    fn transient_errors_are_retried() {
+        // error_rate 0.5: with 4 retries per request, 20 requests all
+        // succeed with overwhelming probability, and retries are counted
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 95)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let policy = ResiliencePolicy {
+            retry: RetryPolicy { max_retries: 4, backoff: Duration::from_micros(100) },
+            fallback_enabled: false,
+            breaker: BreakerPolicy { threshold: 1000, cooldown: Duration::from_secs(60) },
+            ..ResiliencePolicy::default()
+        };
+        let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
+        let chaos = ChaosEngine::new(
+            brute,
+            crate::engine::chaos::ChaosConfig {
+                error_rate: 0.5,
+                seed: 10,
+                ..Default::default()
+            },
+        );
+        r.register("chaos", Arc::new(chaos));
+        let mut ok = 0;
+        for _ in 0..20 {
+            if let Response::Neighbors(_) =
+                r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None })
+            {
+                ok += 1;
+            }
+        }
+        let s = r.metrics().snapshot();
+        assert!(ok >= 18, "ok={ok}");
+        assert!(s.retries > 0, "{s:?}");
+    }
+
+    #[test]
+    fn health_line_reports_state() {
+        let r = router();
+        match r.handle(&Request::Health) {
+            Response::Text(t) => {
+                assert!(t.contains("status=ok"), "{t}");
+                assert!(t.contains("default=brute"), "{t}");
+                assert!(t.contains("queue_depth=0"), "{t}");
+                assert!(t.contains("engines=active,brute"), "{t}");
+                assert!(t.contains("active:closed"), "{t}");
+                assert!(t.contains("brute:closed"), "{t}");
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -1,11 +1,21 @@
 //! TCP server: newline-delimited protocol over std::net, connections
-//! handled by the worker pool, graceful shutdown via an atomic flag.
+//! handled by a panic-isolated worker pool, graceful shutdown via an
+//! atomic flag.
+//!
+//! Resilience: admission control sheds connections with a structured
+//! `ERR overload` line once the in-flight count reaches the configured
+//! limit (instead of queueing unboundedly), failed `accept()` calls are
+//! counted and backed off (no hot-looping on a sick listener), and a
+//! job that cannot be queued on a shut-down pool is dropped with an
+//! error counter rather than panicking the accept loop.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
+use super::metrics::Metrics;
 use super::protocol::{Request, Response};
 use super::router::Router;
 use super::worker::ThreadPool;
@@ -15,6 +25,19 @@ use crate::error::{AsnnError, Result};
 pub struct Server {
     router: Arc<Router>,
     workers: usize,
+    /// Admission limit: connections admitted but not yet finished.
+    /// 0 = unlimited (no shedding).
+    max_inflight: usize,
+}
+
+/// Decrements the in-flight gauge when a connection finishes, even if
+/// its handler panics (the guard drops during unwind).
+struct InflightGuard(Arc<Metrics>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.exit_inflight();
+    }
 }
 
 /// Handle for stopping a running server.
@@ -48,7 +71,13 @@ impl Drop for ServerHandle {
 
 impl Server {
     pub fn new(router: Arc<Router>, workers: usize) -> Self {
-        Self { router, workers: workers.max(1) }
+        Self { router, workers: workers.max(1), max_inflight: 0 }
+    }
+
+    /// Shed connections once `n` are in flight (0 = unlimited).
+    pub fn with_max_inflight(mut self, n: usize) -> Self {
+        self.max_inflight = n;
+        self
     }
 
     /// Bind and serve in a background thread; returns a stop handle.
@@ -63,29 +92,74 @@ impl Server {
         let stop2 = Arc::clone(&stop);
         let router = Arc::clone(&self.router);
         let workers = self.workers;
+        let max_inflight = self.max_inflight;
         let join = std::thread::Builder::new()
             .name("asnn-accept".into())
             .spawn(move || {
-                let pool = ThreadPool::new(workers);
+                let metrics = Arc::clone(router.metrics());
+                let pool_metrics = Arc::clone(&metrics);
+                let pool = ThreadPool::with_observer(
+                    workers,
+                    Arc::new(move || pool_metrics.record_panic()),
+                );
+                let mut accept_failures = 0u32;
                 for conn in listener.incoming() {
                     if stop2.load(Ordering::SeqCst) {
                         break;
                     }
                     match conn {
                         Ok(stream) => {
-                            let router = Arc::clone(&router);
-                            let stop = Arc::clone(&stop2);
-                            pool.execute(move || {
-                                let _ = handle_connection(stream, &router, &stop);
+                            accept_failures = 0;
+                            if max_inflight > 0
+                                && metrics.inflight() >= max_inflight as u64
+                            {
+                                shed(stream, &metrics);
+                                continue;
+                            }
+                            metrics.enter_inflight();
+                            let guard = InflightGuard(Arc::clone(&metrics));
+                            let conn_router = Arc::clone(&router);
+                            let conn_stop = Arc::clone(&stop2);
+                            let queued = pool.execute(move || {
+                                let _inflight = guard;
+                                let _ = handle_connection(stream, &conn_router, &conn_stop);
                             });
+                            if queued.is_err() {
+                                // shutdown raced the accept loop: the job
+                                // (and its guard) was dropped, connection
+                                // closed; count it instead of crashing
+                                metrics.record_error();
+                            }
                         }
-                        Err(_) => continue,
+                        Err(_) => {
+                            // count and back off instead of hot-looping on
+                            // a listener stuck returning errors
+                            metrics.record_accept_error();
+                            accept_failures = accept_failures.saturating_add(1);
+                            let backoff_ms =
+                                (1u64 << accept_failures.min(7)).min(100);
+                            std::thread::sleep(Duration::from_millis(backoff_ms));
+                        }
                     }
                 }
             })
             .map_err(|e| AsnnError::Coordinator(format!("spawn accept loop: {e}")))?;
         Ok(ServerHandle { addr: local, stop, join: Some(join) })
     }
+}
+
+/// Reject a connection with a structured overload error so clients can
+/// distinguish "retry later" from a dead server. Bounded by a write
+/// timeout so a slow client cannot stall the accept loop.
+fn shed(stream: TcpStream, metrics: &Metrics) {
+    metrics.record_shed();
+    stream.set_write_timeout(Some(Duration::from_millis(100))).ok();
+    let mut writer = BufWriter::new(stream);
+    let resp = Response::from_error(&AsnnError::Overloaded(
+        "server at capacity; retry later".into(),
+    ));
+    let _ = writeln!(writer, "{}", resp.format());
+    let _ = writer.flush();
 }
 
 /// Serve one connection until QUIT/EOF/server-stop. Reads use a short
@@ -232,6 +306,66 @@ mod tests {
             .collect();
         for t in threads {
             t.join().unwrap();
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_with_structured_error_then_recovers() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 106)));
+        let mut router = Router::new("brute", Arc::new(Metrics::new()));
+        router.register("brute", Arc::new(BruteEngine::new(ds)));
+        let router = Arc::new(router);
+        let handle = Server::new(Arc::clone(&router), 1)
+            .with_max_inflight(1)
+            .spawn("127.0.0.1:0")
+            .unwrap();
+
+        // occupy the single admission slot (PING proves it's admitted)
+        let mut holder = Client::connect(&handle.addr).unwrap();
+        assert_eq!(holder.call(&Request::Ping).unwrap(), Response::Text("pong".into()));
+
+        // second connection is shed with a structured overload error
+        let mut extra = Client::connect(&handle.addr).unwrap();
+        match extra.call(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }).unwrap() {
+            Response::Error { domain, message } => {
+                assert_eq!(domain, "overload");
+                assert!(message.contains("retry"), "{message}");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(router.metrics().snapshot().shed, 1);
+
+        // free the slot; the server recovers and admits new connections
+        drop(holder);
+        let mut ok = false;
+        for _ in 0..50 {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            if let Ok(mut c) = Client::connect(&handle.addr) {
+                if let Ok(Response::Text(t)) = c.call(&Request::Ping) {
+                    assert_eq!(t, "pong");
+                    ok = true;
+                    break;
+                }
+            }
+        }
+        assert!(ok, "server did not recover after shed");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn health_probe_over_tcp() {
+        let handle = spawn_server();
+        let mut client = Client::connect(&handle.addr).unwrap();
+        match client.call(&Request::Health).unwrap() {
+            Response::Text(t) => {
+                assert!(t.contains("status=ok"), "{t}");
+                assert!(t.contains("engines=brute"), "{t}");
+                assert!(t.contains("brute:closed"), "{t}");
+                // this connection is itself in flight
+                assert!(t.contains("queue_depth=1"), "{t}");
+            }
+            other => panic!("{other:?}"),
         }
         handle.shutdown();
     }

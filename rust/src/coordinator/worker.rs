@@ -1,67 +1,150 @@
-//! Fixed-size thread pool (std-only) for connection handling.
+//! Fixed-size thread pool (std-only) for connection handling, with
+//! panic isolation: a panicking job is caught with `catch_unwind` and
+//! counted, degrading that one request instead of killing the worker
+//! and silently shrinking the pool. A respawn guard backstops the
+//! catch — if a panic ever does escape (e.g. a panic raised while the
+//! payload's `Drop` unwinds), the dying worker spawns its replacement
+//! and the respawn is counted.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::error::{AsnnError, Result};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Called (from the worker thread) each time a job panic is caught;
+/// lets the server feed pool panics into its metrics.
+pub type PanicObserver = Arc<dyn Fn() + Send + Sync>;
+
+struct PoolShared {
+    rx: Mutex<Receiver<Job>>,
+    panics: AtomicU64,
+    respawns: AtomicU64,
+    observer: Option<PanicObserver>,
+}
 
 /// A basic fixed thread pool; jobs are closures.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
+    shared: Arc<PoolShared>,
 }
 
 impl ThreadPool {
     pub fn new(threads: usize) -> Self {
-        assert!(threads > 0);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..threads)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
-                    .name(format!("asnn-worker-{i}"))
-                    .spawn(move || worker_loop(rx))
-                    .expect("spawn worker")
-            })
-            .collect();
-        Self { tx: Some(tx), handles }
+        Self::build(threads, None)
     }
 
-    /// Queue a job. Panics if the pool is shut down.
-    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx
+    /// Pool whose caught-panic events are reported to `observer`.
+    pub fn with_observer(threads: usize, observer: PanicObserver) -> Self {
+        Self::build(threads, Some(observer))
+    }
+
+    fn build(threads: usize, observer: Option<PanicObserver>) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let shared = Arc::new(PoolShared {
+            rx: Mutex::new(rx),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            observer,
+        });
+        let handles =
+            (0..threads).map(|i| spawn_worker(i, Arc::clone(&shared))).collect();
+        Self { tx: Some(tx), handles, shared }
+    }
+
+    /// Queue a job. Errors (instead of panicking) if the pool has shut
+    /// down, so a shutdown racing the accept loop can't crash the
+    /// server.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        let tx = self
+            .tx
             .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(job))
-            .expect("worker channel closed");
+            .ok_or_else(|| AsnnError::Coordinator("thread pool shut down".into()))?;
+        tx.send(Box::new(job))
+            .map_err(|_| AsnnError::Coordinator("worker channel closed".into()))
+    }
+
+    /// Close the queue and join the original workers. Subsequent
+    /// `execute` calls return an error. Idempotent.
+    pub fn shutdown(&mut self) {
+        drop(self.tx.take()); // close the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 
     pub fn threads(&self) -> usize {
         self.handles.len()
     }
+
+    /// Job panics caught (and survived) so far.
+    pub fn panics_caught(&self) -> u64 {
+        self.shared.panics.load(Ordering::Relaxed)
+    }
+
+    /// Workers respawned after an escaped panic (0 in normal operation).
+    pub fn respawns(&self) -> u64 {
+        self.shared.respawns.load(Ordering::Relaxed)
+    }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
-    loop {
-        let job = {
-            let guard = rx.lock().unwrap();
-            guard.recv()
-        };
-        match job {
-            Ok(job) => job(),
-            Err(_) => break, // all senders dropped: shutdown
+fn spawn_worker(idx: usize, shared: Arc<PoolShared>) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("asnn-worker-{idx}"))
+        .spawn(move || worker_loop(idx, shared))
+        .expect("spawn worker")
+}
+
+/// Backstop for panics that escape `catch_unwind`: if the worker
+/// thread unwinds, spawn a replacement so the pool keeps its size.
+/// Replacements are detached (they exit when the channel closes).
+struct RespawnGuard {
+    idx: usize,
+    shared: Arc<PoolShared>,
+    armed: bool,
+}
+
+impl Drop for RespawnGuard {
+    fn drop(&mut self) {
+        if self.armed && std::thread::panicking() {
+            self.shared.respawns.fetch_add(1, Ordering::Relaxed);
+            let _ = spawn_worker(self.idx, Arc::clone(&self.shared));
         }
     }
 }
 
+fn worker_loop(idx: usize, shared: Arc<PoolShared>) {
+    let mut guard = RespawnGuard { idx, shared: Arc::clone(&shared), armed: true };
+    loop {
+        let job = {
+            // recover the receiver even if a previous holder panicked
+            let rx = shared.rx.lock().unwrap_or_else(|p| p.into_inner());
+            rx.recv()
+        };
+        match job {
+            Ok(job) => {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    shared.panics.fetch_add(1, Ordering::Relaxed);
+                    if let Some(obs) = &shared.observer {
+                        obs();
+                    }
+                }
+            }
+            Err(_) => break, // all senders dropped: shutdown
+        }
+    }
+    guard.armed = false; // clean exit: no respawn
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close the channel
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -78,7 +161,8 @@ mod tests {
             let c = Arc::clone(&counter);
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         drop(pool); // joins workers
         assert_eq!(counter.load(Ordering::SeqCst), 100);
@@ -94,7 +178,8 @@ mod tests {
             pool.execute(move || {
                 std::thread::sleep(std::time::Duration::from_millis(50));
                 tx.send(()).unwrap();
-            });
+            })
+            .unwrap();
         }
         rx.recv().unwrap();
         rx.recv().unwrap();
@@ -105,5 +190,53 @@ mod tests {
     #[test]
     fn reports_thread_count() {
         assert_eq!(ThreadPool::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        let mut pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 4 == 0 {
+                    panic!("poisoned job {i}");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        pool.shutdown(); // drains the queue, joins workers
+        // 5 of 20 jobs panic; the other 15 must still run
+        assert_eq!(counter.load(Ordering::SeqCst), 15);
+        assert_eq!(pool.panics_caught(), 5);
+        assert_eq!(pool.respawns(), 0);
+    }
+
+    #[test]
+    fn panics_are_counted_and_observed() {
+        let observed = Arc::new(AtomicUsize::new(0));
+        let obs = Arc::clone(&observed);
+        let mut pool =
+            ThreadPool::with_observer(1, Arc::new(move || {
+                obs.fetch_add(1, Ordering::SeqCst);
+            }));
+        for _ in 0..3 {
+            pool.execute(|| panic!("boom")).unwrap();
+        }
+        pool.shutdown(); // drains the queue, joins workers
+        assert_eq!(pool.panics_caught(), 3);
+        assert_eq!(observed.load(Ordering::SeqCst), 3);
+        assert_eq!(pool.respawns(), 0); // catch_unwind held
+    }
+
+    #[test]
+    fn execute_on_shut_down_pool_errors_instead_of_panicking() {
+        let mut pool = ThreadPool::new(1);
+        pool.execute(|| {}).unwrap();
+        pool.shutdown();
+        let err = pool.execute(|| {}).unwrap_err();
+        assert_eq!(err.tag(), "coordinator");
+        pool.shutdown(); // idempotent
     }
 }

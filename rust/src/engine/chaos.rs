@@ -1,0 +1,223 @@
+//! Fault-injection wrapper engine for resilience testing.
+//!
+//! [`ChaosEngine`] implements [`NnEngine`] by delegating to an inner
+//! engine after (deterministically, seeded via [`crate::util::rng`])
+//! injecting configurable latency, errors, and panics. The coordinator
+//! chaos tests register it like any other engine and drive the real
+//! server through it, so panic isolation, deadlines, circuit breakers,
+//! and fallback are all exercised end-to-end rather than mocked.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::{Neighbor, NnEngine, QueryStats};
+use crate::error::{AsnnError, Result};
+use crate::util::rng::Rng;
+
+/// Injection probabilities and shape. Rates are independent per call:
+/// latency is applied first (so a slow call can also fail), then panic,
+/// then error.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    /// Probability of returning `AsnnError::Runtime` per call.
+    pub error_rate: f64,
+    /// Probability of panicking per call.
+    pub panic_rate: f64,
+    /// Probability of sleeping `latency` before proceeding.
+    pub latency_rate: f64,
+    pub latency: Duration,
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            error_rate: 0.0,
+            panic_rate: 0.0,
+            latency_rate: 0.0,
+            latency: Duration::from_millis(50),
+            seed: 0xC4A05,
+        }
+    }
+}
+
+/// Counters of what was actually injected (for assertions).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosCounts {
+    pub errors: u64,
+    pub panics: u64,
+    pub delays: u64,
+}
+
+/// An [`NnEngine`] that misbehaves on purpose.
+pub struct ChaosEngine {
+    inner: Arc<dyn NnEngine>,
+    cfg: ChaosConfig,
+    rng: Mutex<Rng>,
+    errors: AtomicU64,
+    panics: AtomicU64,
+    delays: AtomicU64,
+}
+
+impl ChaosEngine {
+    pub fn new(inner: Arc<dyn NnEngine>, cfg: ChaosConfig) -> Self {
+        Self {
+            inner,
+            cfg,
+            rng: Mutex::new(Rng::new(cfg.seed)),
+            errors: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+        }
+    }
+
+    /// Every call fails with a runtime error.
+    pub fn failing(inner: Arc<dyn NnEngine>, seed: u64) -> Self {
+        Self::new(inner, ChaosConfig { error_rate: 1.0, seed, ..ChaosConfig::default() })
+    }
+
+    /// Every call panics.
+    pub fn panicking(inner: Arc<dyn NnEngine>, seed: u64) -> Self {
+        Self::new(inner, ChaosConfig { panic_rate: 1.0, seed, ..ChaosConfig::default() })
+    }
+
+    /// Every call sleeps `latency` first.
+    pub fn slow(inner: Arc<dyn NnEngine>, latency: Duration, seed: u64) -> Self {
+        Self::new(
+            inner,
+            ChaosConfig { latency_rate: 1.0, latency, seed, ..ChaosConfig::default() },
+        )
+    }
+
+    pub fn counts(&self) -> ChaosCounts {
+        ChaosCounts {
+            errors: self.errors.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Roll the dice once; sleep, panic, or error per config. The rng
+    /// lock is released before sleeping/panicking so a stuck or
+    /// unwinding call never poisons other callers.
+    fn inject(&self) -> Result<()> {
+        let (delay_roll, panic_roll, error_roll) = {
+            let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+            (rng.next_f64(), rng.next_f64(), rng.next_f64())
+        };
+        if delay_roll < self.cfg.latency_rate {
+            self.delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.cfg.latency);
+        }
+        if panic_roll < self.cfg.panic_rate {
+            self.panics.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: injected panic");
+        }
+        if error_roll < self.cfg.error_rate {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(AsnnError::Runtime("chaos: injected engine fault".into()));
+        }
+        Ok(())
+    }
+}
+
+impl NnEngine for ChaosEngine {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>> {
+        self.inject()?;
+        self.inner.knn(q, k)
+    }
+
+    fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        self.inject()?;
+        self.inner.knn_stats(q, k)
+    }
+
+    fn classify(&self, q: &[f64], k: usize) -> Result<u16> {
+        self.inject()?;
+        self.inner.classify(q, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::engine::brute::BruteEngine;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn inner() -> Arc<dyn NnEngine> {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(500, 71)));
+        Arc::new(BruteEngine::new(ds))
+    }
+
+    #[test]
+    fn zero_rates_are_transparent() {
+        let base = inner();
+        let chaos = ChaosEngine::new(Arc::clone(&base), ChaosConfig::default());
+        let a = chaos.knn(&[0.5, 0.5], 7).unwrap();
+        let b = base.knn(&[0.5, 0.5], 7).unwrap();
+        assert_eq!(a.len(), 7);
+        let ids = |v: &[Neighbor]| v.iter().map(|n| n.id).collect::<Vec<_>>();
+        assert_eq!(ids(&a), ids(&b));
+        assert_eq!(chaos.counts(), ChaosCounts::default());
+    }
+
+    #[test]
+    fn failing_always_errors_with_runtime_tag() {
+        let chaos = ChaosEngine::failing(inner(), 1);
+        for _ in 0..5 {
+            match chaos.knn(&[0.5, 0.5], 3) {
+                Err(e) => assert_eq!(e.tag(), "runtime"),
+                Ok(_) => panic!("expected injected error"),
+            }
+        }
+        assert_eq!(chaos.counts().errors, 5);
+    }
+
+    #[test]
+    fn panicking_panics_and_counts() {
+        let chaos = ChaosEngine::panicking(inner(), 2);
+        let r = catch_unwind(AssertUnwindSafe(|| chaos.knn(&[0.5, 0.5], 3)));
+        assert!(r.is_err());
+        assert_eq!(chaos.counts().panics, 1);
+        // rng lock was released before the panic: next call still rolls
+        let r2 = catch_unwind(AssertUnwindSafe(|| chaos.classify(&[0.5, 0.5], 3)));
+        assert!(r2.is_err());
+        assert_eq!(chaos.counts().panics, 2);
+    }
+
+    #[test]
+    fn slow_injects_latency() {
+        let chaos = ChaosEngine::slow(inner(), Duration::from_millis(30), 3);
+        let t = std::time::Instant::now();
+        chaos.knn(&[0.5, 0.5], 3).unwrap();
+        assert!(t.elapsed() >= Duration::from_millis(25), "{:?}", t.elapsed());
+        assert_eq!(chaos.counts().delays, 1);
+    }
+
+    #[test]
+    fn injection_sequence_is_deterministic_per_seed() {
+        let mk = |seed| {
+            ChaosEngine::new(
+                inner(),
+                ChaosConfig { error_rate: 0.5, seed, ..ChaosConfig::default() },
+            )
+        };
+        let outcomes = |e: &ChaosEngine| {
+            (0..32).map(|_| e.knn(&[0.5, 0.5], 3).is_ok()).collect::<Vec<_>>()
+        };
+        let (a, b) = (mk(42), mk(42));
+        assert_eq!(outcomes(&a), outcomes(&b));
+        let c = mk(43);
+        assert_ne!(outcomes(&a), outcomes(&c)); // overwhelmingly likely
+    }
+}

@@ -8,12 +8,15 @@
 //! - [`active_pjrt`] — same algorithm with the circle-count/scan hot
 //!   spot executed by AOT-compiled XLA artifacts via PJRT;
 //! - [`active3d`] — the paper's §3 higher-dimension sketch over a
-//!   voxel volume (d = 3 Eq. 1).
+//!   voxel volume (d = 3 Eq. 1);
+//! - [`chaos`] — fault-injection wrapper around any engine (latency,
+//!   errors, panics) for resilience testing of the coordinator.
 
 pub mod active;
 pub mod active3d;
 pub mod active_pjrt;
 pub mod brute;
+pub mod chaos;
 pub mod kdtree;
 pub mod lsh;
 

@@ -37,6 +37,16 @@ pub enum AsnnError {
     #[error("protocol error: {0}")]
     Protocol(String),
 
+    /// Server at capacity: request shed by admission control. Clients
+    /// should back off and retry.
+    #[error("overloaded: {0}")]
+    Overloaded(String),
+
+    /// Per-request deadline exceeded (the engine kept running; the
+    /// response was abandoned).
+    #[error("timeout: {0}")]
+    Timeout(String),
+
     /// Underlying I/O failure.
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
@@ -56,6 +66,8 @@ impl AsnnError {
             AsnnError::Runtime(_) => "runtime",
             AsnnError::Coordinator(_) => "coordinator",
             AsnnError::Protocol(_) => "protocol",
+            AsnnError::Overloaded(_) => "overload",
+            AsnnError::Timeout(_) => "timeout",
             AsnnError::Io(_) => "io",
         }
     }
@@ -91,6 +103,8 @@ mod tests {
             AsnnError::Runtime(String::new()).tag(),
             AsnnError::Coordinator(String::new()).tag(),
             AsnnError::Protocol(String::new()).tag(),
+            AsnnError::Overloaded(String::new()).tag(),
+            AsnnError::Timeout(String::new()).tag(),
         ];
         let mut uniq = tags.to_vec();
         uniq.sort();

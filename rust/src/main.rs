@@ -14,7 +14,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use asnn::config::{AsnnConfig, EngineKind, Metric, R0Policy, SearchMode};
-use asnn::coordinator::{Metrics, Router, Server};
+use asnn::coordinator::{Metrics, ResiliencePolicy, Router, Server};
 use asnn::data::synthetic::{generate, generate_queries, Family, SyntheticSpec};
 use asnn::data::{io as dio, Dataset};
 use asnn::engine::active::{ActiveEngine, ActiveParams};
@@ -258,7 +258,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let ds = load_dataset(args, &cfg)?;
     let metrics = Arc::new(Metrics::new());
-    let mut router = Router::new(cfg.engine.name(), metrics);
+    let policy = ResiliencePolicy::from_config(&cfg.resilience);
+    let mut router = Router::with_policy(cfg.engine.name(), metrics, policy);
     // always register the cheap engines; PJRT only when artifacts exist
     router.register("brute", Arc::new(BruteEngine::new(ds.clone())));
     router.register("kdtree", Arc::new(KdTreeEngine::build(ds.clone())));
@@ -283,9 +284,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         println!("no artifacts at {} — PJRT engine disabled", artifacts.display());
     }
-    let server = Server::new(Arc::new(router), cfg.server.workers);
+    let server = Server::new(Arc::new(router), cfg.server.workers)
+        .with_max_inflight(cfg.resilience.max_inflight);
     let handle = server.spawn(&cfg.server.addr)?;
-    println!("serving on {} (engines ready; Ctrl-C to stop)", handle.addr);
+    println!(
+        "serving on {} (engines ready; deadline={}ms max_inflight={}; Ctrl-C to stop)",
+        handle.addr, cfg.resilience.deadline_ms, cfg.resilience.max_inflight
+    );
     // block forever (no signal handling crates offline; Ctrl-C kills us)
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -1,0 +1,262 @@
+//! Chaos end-to-end: drive the real TCP server through a fault-injecting
+//! engine and prove the resilience layer holds — panics are isolated,
+//! slow calls hit deadlines, failures trip circuit breakers onto the
+//! fallback chain, a full queue sheds with a structured overload error,
+//! and through all of it the server stays up and keeps answering
+//! correct k-NN queries, with the damage visible in STATS.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use asnn::coordinator::resilience::{BreakerPolicy, ResiliencePolicy, RetryPolicy};
+use asnn::coordinator::server::Client;
+use asnn::coordinator::{Metrics, Request, Response, Router, Server};
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::chaos::{ChaosConfig, ChaosEngine};
+use asnn::engine::NnEngine;
+
+/// Router whose default engine is chaos-wrapped brute force, with the
+/// plain brute engine as the only fallback. Failures through "chaos"
+/// must land on "brute" and produce exact answers.
+fn chaos_router(chaos: ChaosConfig, policy: ResiliencePolicy, n: usize, seed: u64) -> Router {
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(n, seed)));
+    let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+    let mut router = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
+    router.register("chaos", Arc::new(ChaosEngine::new(Arc::clone(&brute), chaos)));
+    router.register("brute", brute);
+    router.set_fallback_chain(vec!["brute".into()]);
+    router
+}
+
+fn knn_ids(c: &mut Client, k: usize, engine: Option<&str>) -> Vec<u32> {
+    match c
+        .call(&Request::Knn { k, x: 0.42, y: 0.58, engine: engine.map(String::from) })
+        .unwrap()
+    {
+        Response::Neighbors(hits) => {
+            assert_eq!(hits.len(), k);
+            let mut ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+            ids.sort();
+            ids
+        }
+        other => panic!("expected neighbors, got {other:?}"),
+    }
+}
+
+fn stats(c: &mut Client) -> String {
+    match c.call(&Request::Stats).unwrap() {
+        Response::Text(t) => t,
+        other => panic!("expected stats text, got {other:?}"),
+    }
+}
+
+/// Pull `field=<u64>` out of a STATS line.
+fn stat(text: &str, field: &str) -> u64 {
+    let key = format!("{field}=");
+    text.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&key))
+        .unwrap_or_else(|| panic!("missing {field} in {text:?}"))
+        .parse()
+        .unwrap_or_else(|_| panic!("non-numeric {field} in {text:?}"))
+}
+
+#[test]
+fn panicking_engine_trips_breaker_onto_fallback_and_server_stays_up() {
+    let policy = ResiliencePolicy {
+        breaker: BreakerPolicy { threshold: 3, cooldown: Duration::from_secs(60) },
+        ..ResiliencePolicy::default()
+    };
+    let router = Arc::new(chaos_router(
+        ChaosConfig { panic_rate: 1.0, seed: 1, ..ChaosConfig::default() },
+        policy,
+        2000,
+        601,
+    ));
+    let handle = Server::new(Arc::clone(&router), 2).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+
+    // every request is answered correctly despite the default engine
+    // panicking on every call
+    let truth = knn_ids(&mut c, 7, Some("brute"));
+    for _ in 0..8 {
+        assert_eq!(knn_ids(&mut c, 7, None), truth);
+    }
+
+    let s = stats(&mut c);
+    assert!(stat(&s, "panics") >= 3, "{s}");
+    assert_eq!(stat(&s, "trips"), 1, "{s}");
+    assert!(stat(&s, "fallbacks") >= 8, "{s}");
+    assert_eq!(stat(&s, "errors"), 0, "{s}");
+
+    // HEALTH reports the tripped breaker and degraded status
+    match c.call(&Request::Health).unwrap() {
+        Response::Text(t) => {
+            assert!(t.contains("status=degraded"), "{t}");
+            assert!(t.contains("chaos:open"), "{t}");
+            assert!(t.contains("brute:closed"), "{t}");
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // the server is still fully alive
+    assert_eq!(c.call(&Request::Ping).unwrap(), Response::Text("pong".into()));
+    handle.shutdown();
+}
+
+#[test]
+fn injected_errors_are_retried_then_fall_back() {
+    let policy = ResiliencePolicy {
+        retry: RetryPolicy { max_retries: 2, backoff: Duration::from_micros(200) },
+        breaker: BreakerPolicy { threshold: 4, cooldown: Duration::from_secs(60) },
+        ..ResiliencePolicy::default()
+    };
+    let router = Arc::new(chaos_router(
+        ChaosConfig { error_rate: 1.0, seed: 2, ..ChaosConfig::default() },
+        policy,
+        2000,
+        602,
+    ));
+    let handle = Server::new(Arc::clone(&router), 2).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+
+    let truth = knn_ids(&mut c, 5, Some("brute"));
+    for _ in 0..4 {
+        assert_eq!(knn_ids(&mut c, 5, None), truth);
+    }
+
+    let s = stats(&mut c);
+    assert!(stat(&s, "retries") > 0, "{s}");
+    assert!(stat(&s, "fallbacks") >= 4, "{s}");
+    // one breaker failure per request (retries count inside the
+    // attempt): the 4th consecutive failed request trips it
+    assert_eq!(stat(&s, "trips"), 1, "{s}");
+    assert_eq!(stat(&s, "errors"), 0, "{s}");
+    handle.shutdown();
+}
+
+#[test]
+fn latency_beyond_deadline_times_out_onto_fallback() {
+    let policy = ResiliencePolicy {
+        deadline: Some(Duration::from_millis(40)),
+        breaker: BreakerPolicy { threshold: 2, cooldown: Duration::from_secs(60) },
+        ..ResiliencePolicy::default()
+    };
+    let router = Arc::new(chaos_router(
+        ChaosConfig {
+            latency_rate: 1.0,
+            latency: Duration::from_millis(400),
+            seed: 3,
+            ..ChaosConfig::default()
+        },
+        policy,
+        2000,
+        603,
+    ));
+    let handle = Server::new(Arc::clone(&router), 2).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+
+    let truth = knn_ids(&mut c, 5, Some("brute"));
+    let t0 = std::time::Instant::now();
+    for _ in 0..3 {
+        assert_eq!(knn_ids(&mut c, 5, None), truth);
+    }
+    // 3 requests against a 400ms-slow engine with a 40ms deadline:
+    // far faster than riding out the injected latency every time
+    // (breaker opens after 2 timeouts, request 3 skips straight to brute)
+    assert!(t0.elapsed() < Duration::from_millis(900), "{:?}", t0.elapsed());
+
+    let s = stats(&mut c);
+    assert!(stat(&s, "timeouts") >= 2, "{s}");
+    assert_eq!(stat(&s, "trips"), 1, "{s}");
+    assert!(stat(&s, "fallbacks") >= 3, "{s}");
+    handle.shutdown();
+}
+
+#[test]
+fn full_queue_sheds_with_structured_overload_error() {
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 604)));
+    let mut router = Router::new("brute", Arc::new(Metrics::new()));
+    router.register("brute", Arc::new(BruteEngine::new(ds)));
+    let router = Arc::new(router);
+    let handle = Server::new(Arc::clone(&router), 2)
+        .with_max_inflight(1)
+        .spawn("127.0.0.1:0")
+        .unwrap();
+
+    // first connection takes the only admission slot
+    let mut holder = Client::connect(&handle.addr).unwrap();
+    assert_eq!(holder.call(&Request::Ping).unwrap(), Response::Text("pong".into()));
+
+    // the next connections are shed, not queued and not dropped silently
+    for _ in 0..3 {
+        let mut extra = Client::connect(&handle.addr).unwrap();
+        match extra.call(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }).unwrap() {
+            Response::Error { domain, message } => {
+                assert_eq!(domain, "overload");
+                assert!(message.contains("retry"), "{message}");
+            }
+            other => panic!("expected overload error, got {other:?}"),
+        }
+    }
+
+    // the held connection still works and sees the shed count
+    let s = stats(&mut holder);
+    assert_eq!(stat(&s, "shed"), 3, "{s}");
+    assert!(knn_ids(&mut holder, 3, None).len() == 3);
+    handle.shutdown();
+}
+
+#[test]
+fn mixed_chaos_under_concurrent_load_never_loses_a_request() {
+    let policy = ResiliencePolicy {
+        deadline: Some(Duration::from_millis(150)),
+        retry: RetryPolicy { max_retries: 1, backoff: Duration::from_micros(200) },
+        breaker: BreakerPolicy { threshold: 4, cooldown: Duration::from_millis(200) },
+        ..ResiliencePolicy::default()
+    };
+    let router = Arc::new(chaos_router(
+        ChaosConfig {
+            error_rate: 0.3,
+            panic_rate: 0.2,
+            latency_rate: 0.2,
+            latency: Duration::from_millis(30),
+            seed: 4,
+            ..ChaosConfig::default()
+        },
+        policy,
+        5000,
+        605,
+    ));
+    let handle = Server::new(Arc::clone(&router), 4).spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+
+    let threads: Vec<_> = (0..3)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for i in 0..15 {
+                    match c
+                        .call(&Request::Knn { k: 5, x: 0.3, y: 0.6, engine: None })
+                        .unwrap()
+                    {
+                        Response::Neighbors(hits) => assert_eq!(hits.len(), 5),
+                        other => panic!("thread {t} req {i}: {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // afterwards: still up, still exact
+    let mut c = Client::connect(&addr).unwrap();
+    let truth = knn_ids(&mut c, 9, Some("brute"));
+    assert_eq!(knn_ids(&mut c, 9, None), truth);
+    let s = stats(&mut c);
+    assert_eq!(stat(&s, "errors"), 0, "{s}");
+    assert_eq!(stat(&s, "knn") , 47, "{s}"); // 45 load + 2 verification
+    handle.shutdown();
+}
