@@ -161,6 +161,14 @@ pub struct ResilienceConfig {
     /// Per-attempt engine deadline in milliseconds; 0 disables the
     /// deadline guard (engine calls then run inline).
     pub deadline_ms: u64,
+    /// Whole-request deadline budget in milliseconds: retries, backoff
+    /// sleeps, and fallback hops all draw from this one budget.
+    /// 0 disables budgeting.
+    pub budget_ms: u64,
+    /// How long a request waits for its current engine before hedging
+    /// the same query at the next healthy fallback engine; 0 disables
+    /// hedging.
+    pub hedge_delay_ms: u64,
     /// Admitted-but-unfinished connection limit before the server
     /// sheds with `ERR overload`; 0 = unlimited.
     pub max_inflight: usize,
@@ -172,6 +180,12 @@ pub struct ResilienceConfig {
     pub breaker_threshold: u32,
     /// Open-breaker cooldown before a half-open probe.
     pub breaker_cooldown_ms: u64,
+    /// Consecutive half-open probe successes required before an open
+    /// breaker closes again (guards against flapping engines).
+    pub probe_successes: u32,
+    /// How long shutdown waits for in-flight connections to finish
+    /// before force-closing them.
+    pub drain_deadline_ms: u64,
     /// Whether engine failures fall through the fallback chain.
     pub fallback: bool,
 }
@@ -221,11 +235,15 @@ impl Default for AsnnConfig {
             },
             resilience: ResilienceConfig {
                 deadline_ms: 0,
+                budget_ms: 0,
+                hedge_delay_ms: 0,
                 max_inflight: 1024,
                 retry_max: 1,
                 retry_backoff_us: 500,
                 breaker_threshold: 5,
                 breaker_cooldown_ms: 1000,
+                probe_successes: 1,
+                drain_deadline_ms: 500,
                 fallback: true,
             },
         }
@@ -287,6 +305,13 @@ impl AsnnConfig {
 
         cfg.resilience.deadline_ms =
             doc.int_or("resilience", "deadline_ms", cfg.resilience.deadline_ms as i64) as u64;
+        cfg.resilience.budget_ms =
+            doc.int_or("resilience", "budget_ms", cfg.resilience.budget_ms as i64) as u64;
+        cfg.resilience.hedge_delay_ms = doc.int_or(
+            "resilience",
+            "hedge_delay_ms",
+            cfg.resilience.hedge_delay_ms as i64,
+        ) as u64;
         cfg.resilience.max_inflight =
             doc.int_or("resilience", "max_inflight", cfg.resilience.max_inflight as i64)
                 as usize;
@@ -306,6 +331,16 @@ impl AsnnConfig {
             "resilience",
             "breaker_cooldown_ms",
             cfg.resilience.breaker_cooldown_ms as i64,
+        ) as u64;
+        cfg.resilience.probe_successes = doc.int_or(
+            "resilience",
+            "probe_successes",
+            cfg.resilience.probe_successes as i64,
+        ) as u32;
+        cfg.resilience.drain_deadline_ms = doc.int_or(
+            "resilience",
+            "drain_deadline_ms",
+            cfg.resilience.drain_deadline_ms as i64,
         ) as u64;
         cfg.resilience.fallback =
             doc.bool_or("resilience", "fallback", cfg.resilience.fallback);
@@ -372,6 +407,16 @@ impl AsnnConfig {
                 "resilience.breaker_cooldown_ms must be > 0".into(),
             ));
         }
+        if self.resilience.probe_successes == 0 {
+            return Err(AsnnError::Config(
+                "resilience.probe_successes must be > 0".into(),
+            ));
+        }
+        if self.resilience.drain_deadline_ms == 0 {
+            return Err(AsnnError::Config(
+                "resilience.drain_deadline_ms must be > 0".into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -427,12 +472,18 @@ mod tests {
         assert!(AsnnConfig::from_toml("[data]\nn = 5\n[search]\nk = 11").is_err());
         assert!(AsnnConfig::from_toml("[resilience]\nbreaker_threshold = 0").is_err());
         assert!(AsnnConfig::from_toml("[resilience]\nbreaker_cooldown_ms = 0").is_err());
+        assert!(AsnnConfig::from_toml("[resilience]\nprobe_successes = 0").is_err());
+        assert!(AsnnConfig::from_toml("[resilience]\ndrain_deadline_ms = 0").is_err());
     }
 
     #[test]
     fn resilience_section_defaults_and_overrides() {
         let c = AsnnConfig::default();
         assert_eq!(c.resilience.deadline_ms, 0); // deadline off by default
+        assert_eq!(c.resilience.budget_ms, 0); // budget off by default
+        assert_eq!(c.resilience.hedge_delay_ms, 0); // hedging off by default
+        assert_eq!(c.resilience.probe_successes, 1);
+        assert_eq!(c.resilience.drain_deadline_ms, 500);
         assert!(c.resilience.fallback);
         c.validate().unwrap();
 
@@ -440,21 +491,29 @@ mod tests {
             r#"
             [resilience]
             deadline_ms = 250
+            budget_ms = 800
+            hedge_delay_ms = 30
             max_inflight = 64
             retry_max = 3
             retry_backoff_us = 1000
             breaker_threshold = 7
             breaker_cooldown_ms = 2000
+            probe_successes = 3
+            drain_deadline_ms = 750
             fallback = false
             "#,
         )
         .unwrap();
         assert_eq!(c.resilience.deadline_ms, 250);
+        assert_eq!(c.resilience.budget_ms, 800);
+        assert_eq!(c.resilience.hedge_delay_ms, 30);
         assert_eq!(c.resilience.max_inflight, 64);
         assert_eq!(c.resilience.retry_max, 3);
         assert_eq!(c.resilience.retry_backoff_us, 1000);
         assert_eq!(c.resilience.breaker_threshold, 7);
         assert_eq!(c.resilience.breaker_cooldown_ms, 2000);
+        assert_eq!(c.resilience.probe_successes, 3);
+        assert_eq!(c.resilience.drain_deadline_ms, 750);
         assert!(!c.resilience.fallback);
     }
 

@@ -1,10 +1,17 @@
 //! Deadline batcher: groups individually-submitted items into batches
 //! of at most `batch_max`, flushing when full or when the oldest item
-//! has waited `deadline`.
+//! has waited `deadline` *since it was submitted* — every item is
+//! timestamped at enqueue, so time spent waiting in the channel counts
+//! against the flush deadline instead of silently extending it.
 //!
 //! The coordinator uses this to feed same-window-scale queries into the
 //! `disk_count_w*_b16` PJRT artifacts — the paper's serial loop,
 //! vectorized across concurrent clients.
+//!
+//! With a per-item budget (`with_budget`), items that have already
+//! waited longer than the budget at flush time are dropped and counted
+//! instead of being processed — a batched query whose requester has
+//! given up is pure wasted work downstream.
 //!
 //! A `process` closure that panics is caught and counted: the batch is
 //! lost but the batcher thread survives, later batches still flush,
@@ -20,9 +27,10 @@ use std::time::{Duration, Instant};
 /// Generic deadline batcher; `process` receives each flushed batch on a
 /// dedicated thread.
 pub struct Batcher<T: Send + 'static> {
-    tx: Option<Sender<T>>,
+    tx: Option<Sender<(Instant, T)>>,
     handle: Option<JoinHandle<()>>,
     panics: Arc<AtomicU64>,
+    expired: Arc<AtomicU64>,
 }
 
 impl<T: Send + 'static> Batcher<T> {
@@ -31,18 +39,56 @@ impl<T: Send + 'static> Batcher<T> {
         deadline: Duration,
         process: impl FnMut(Vec<T>) + Send + 'static,
     ) -> Self {
+        Self::build(batch_max, deadline, None, process)
+    }
+
+    /// Like `new`, but items that have already waited longer than
+    /// `budget` when their batch flushes are dropped (and counted in
+    /// `expired_dropped`) instead of processed.
+    pub fn with_budget(
+        batch_max: usize,
+        deadline: Duration,
+        budget: Duration,
+        process: impl FnMut(Vec<T>) + Send + 'static,
+    ) -> Self {
+        Self::build(batch_max, deadline, Some(budget), process)
+    }
+
+    fn build(
+        batch_max: usize,
+        deadline: Duration,
+        budget: Option<Duration>,
+        process: impl FnMut(Vec<T>) + Send + 'static,
+    ) -> Self {
         assert!(batch_max > 0);
-        let (tx, rx) = channel::<T>();
+        let (tx, rx) = channel::<(Instant, T)>();
         let mut process = process;
         let panics = Arc::new(AtomicU64::new(0));
         let panics2 = Arc::clone(&panics);
+        let expired = Arc::new(AtomicU64::new(0));
+        let expired2 = Arc::clone(&expired);
         let handle = std::thread::Builder::new()
             .name("asnn-batcher".into())
             .spawn(move || {
                 // isolate process() panics: drop the poisoned batch,
-                // keep the batcher thread (and Drop's join) alive
-                let mut run = move |batch: Vec<T>| {
-                    if catch_unwind(AssertUnwindSafe(|| process(batch))).is_err() {
+                // keep the batcher thread (and Drop's join) alive.
+                // Before processing, evict items whose budget elapsed
+                // while they sat in the channel or the forming batch.
+                let mut run = move |batch: Vec<(Instant, T)>| {
+                    let now = Instant::now();
+                    let mut items = Vec::with_capacity(batch.len());
+                    for (enqueued, item) in batch {
+                        match budget {
+                            Some(b) if now.duration_since(enqueued) > b => {
+                                expired2.fetch_add(1, Ordering::Relaxed);
+                            }
+                            _ => items.push(item),
+                        }
+                    }
+                    if items.is_empty() {
+                        return;
+                    }
+                    if catch_unwind(AssertUnwindSafe(|| process(items))).is_err() {
                         panics2.fetch_add(1, Ordering::Relaxed);
                     }
                 };
@@ -52,8 +98,10 @@ impl<T: Send + 'static> Batcher<T> {
                         Ok(item) => item,
                         Err(_) => break, // senders gone: shutdown
                     };
+                    // deadline counts from when the first item was
+                    // *submitted*, not when this thread picked it up
+                    let flush_at = first.0 + deadline;
                     let mut batch = vec![first];
-                    let flush_at = Instant::now() + deadline;
                     while batch.len() < batch_max {
                         let now = Instant::now();
                         if now >= flush_at {
@@ -72,13 +120,14 @@ impl<T: Send + 'static> Batcher<T> {
                 }
             })
             .expect("spawn batcher");
-        Self { tx: Some(tx), handle: Some(handle), panics }
+        Self { tx: Some(tx), handle: Some(handle), panics, expired }
     }
 
-    /// Submit one item; returns false if the batcher has shut down.
+    /// Submit one item (stamped now, for deadline and budget
+    /// accounting); returns false if the batcher has shut down.
     pub fn submit(&self, item: T) -> bool {
         match &self.tx {
-            Some(tx) => tx.send(item).is_ok(),
+            Some(tx) => tx.send((Instant::now(), item)).is_ok(),
             None => false,
         }
     }
@@ -86,6 +135,12 @@ impl<T: Send + 'static> Batcher<T> {
     /// Batches lost to a panicking `process` closure.
     pub fn panics_caught(&self) -> u64 {
         self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Items dropped because they outlived their budget before their
+    /// batch flushed.
+    pub fn expired_dropped(&self) -> u64 {
+        self.expired.load(Ordering::Relaxed)
     }
 }
 
@@ -151,6 +206,66 @@ mod tests {
             assert_eq!(batches.len(), 1, "deadline flush missing: {batches:?}");
             assert_eq!(batches[0], vec![1, 2]);
         }
+        drop(b);
+    }
+
+    #[test]
+    fn deadline_counts_channel_queue_time() {
+        // item 1 ages in the channel while process() stalls on batch 0;
+        // when the batcher finally picks it up its deadline has already
+        // passed, so it must flush immediately instead of granting
+        // itself a fresh full deadline after pickup
+        let times: Arc<Mutex<Vec<(Vec<u32>, Instant)>>> = Arc::new(Mutex::new(Vec::new()));
+        let t = Arc::clone(&times);
+        let b = Batcher::new(1000, Duration::from_millis(200), move |batch: Vec<u32>| {
+            let stall = batch.contains(&0);
+            t.lock().unwrap().push((batch, Instant::now()));
+            if stall {
+                std::thread::sleep(Duration::from_millis(400));
+            }
+        });
+        b.submit(0); // flushes alone at ~200ms, then stalls until ~600ms
+        std::thread::sleep(Duration::from_millis(300));
+        b.submit(1); // enqueued at ~300ms; its deadline passes at ~500ms
+        std::thread::sleep(Duration::from_millis(450));
+        let recorded = times.lock().unwrap();
+        assert_eq!(recorded.len(), 2, "got {} batches", recorded.len());
+        assert_eq!(recorded[1].0, vec![1]);
+        // flush 2 lands when the stall ends (~400ms after flush 1); a
+        // batcher that restarted the deadline at pickup would add a
+        // fresh 200ms on top
+        let gap = recorded[1].1.duration_since(recorded[0].1);
+        assert!(gap < Duration::from_millis(500), "{gap:?}");
+        drop(recorded);
+        drop(b);
+    }
+
+    #[test]
+    fn budget_expired_items_are_dropped_and_counted() {
+        let sink: Arc<Mutex<Vec<u32>>> = Arc::new(Mutex::new(Vec::new()));
+        let s = Arc::clone(&sink);
+        // slow process stalls the batcher so later items overstay their
+        // 50ms budget while queued
+        let b = Batcher::with_budget(
+            1,
+            Duration::from_millis(5),
+            Duration::from_millis(50),
+            move |batch: Vec<u32>| {
+                if batch.contains(&0) {
+                    std::thread::sleep(Duration::from_millis(120));
+                }
+                s.lock().unwrap().extend(batch);
+            },
+        );
+        b.submit(0); // picked up immediately, stalls the thread
+        std::thread::sleep(Duration::from_millis(20));
+        b.submit(1); // waits ~100ms in the channel: expired at flush
+        std::thread::sleep(Duration::from_millis(200));
+        b.submit(2); // fresh: processed normally
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(b.expired_dropped(), 1);
+        let got = sink.lock().unwrap().clone();
+        assert_eq!(got, vec![0, 2], "expired item leaked into a batch");
         drop(b);
     }
 

@@ -1,6 +1,6 @@
 //! Serving metrics: request counters + latency histograms per verb.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::LatencyHistogram;
@@ -22,8 +22,14 @@ pub struct Metrics {
     pub breaker_trips: AtomicU64,
     pub fallbacks: AtomicU64,
     pub panics: AtomicU64,
+    pub hedges: AtomicU64,
+    pub hedge_wins: AtomicU64,
+    pub budget_exhausted: AtomicU64,
     /// Gauge: connections admitted and not yet finished.
     inflight: AtomicU64,
+    /// Gauge: server is draining (shutdown in progress, in-flight
+    /// connections finishing up).
+    draining: AtomicBool,
     knn_latency: Mutex<LatencyHistogram>,
     classify_latency: Mutex<LatencyHistogram>,
 }
@@ -43,6 +49,9 @@ pub struct MetricsSnapshot {
     pub breaker_trips: u64,
     pub fallbacks: u64,
     pub panics: u64,
+    pub hedges: u64,
+    pub hedge_wins: u64,
+    pub budget_exhausted: u64,
     pub knn_mean_us: f64,
     pub knn_p50_us: f64,
     pub knn_p99_us: f64,
@@ -109,6 +118,32 @@ impl Metrics {
         self.panics.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A hedge attempt fired at the next healthy fallback engine.
+    pub fn record_hedge(&self) {
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A hedge attempt answered before the engine it was hedging.
+    pub fn record_hedge_win(&self) {
+        self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request ran out of its deadline budget before any engine
+    /// answered.
+    pub fn record_budget_exhausted(&self) {
+        self.budget_exhausted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Flip the drain gauge (set at shutdown start so HEALTH can report
+    /// `status=draining` while in-flight connections finish).
+    pub fn set_draining(&self, draining: bool) {
+        self.draining.store(draining, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
     pub fn enter_inflight(&self) {
         self.inflight.fetch_add(1, Ordering::SeqCst);
     }
@@ -138,6 +173,9 @@ impl Metrics {
             breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
             fallbacks: self.fallbacks.load(Ordering::Relaxed),
             panics: self.panics.load(Ordering::Relaxed),
+            hedges: self.hedges.load(Ordering::Relaxed),
+            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+            budget_exhausted: self.budget_exhausted.load(Ordering::Relaxed),
             knn_mean_us: knn.mean_ns() / 1e3,
             knn_p50_us: knn.quantile_ns(0.5) as f64 / 1e3,
             knn_p99_us: knn.quantile_ns(0.99) as f64 / 1e3,
@@ -153,7 +191,8 @@ impl MetricsSnapshot {
         format!(
             "knn={} classify={} errors={} batches={} batched={} \
              accept_errors={} shed={} timeouts={} retries={} trips={} \
-             fallbacks={} panics={} \
+             fallbacks={} panics={} hedges={} hedge_wins={} \
+             budget_exhausted={} \
              knn_mean_us={:.1} knn_p50_us={:.1} knn_p99_us={:.1} \
              classify_mean_us={:.1} classify_p99_us={:.1}",
             self.knn_requests,
@@ -168,6 +207,9 @@ impl MetricsSnapshot {
             self.breaker_trips,
             self.fallbacks,
             self.panics,
+            self.hedges,
+            self.hedge_wins,
+            self.budget_exhausted,
             self.knn_mean_us,
             self.knn_p50_us,
             self.knn_p99_us,
@@ -219,6 +261,10 @@ mod tests {
         m.record_trip();
         m.record_fallback();
         m.record_panic();
+        m.record_hedge();
+        m.record_hedge();
+        m.record_hedge_win();
+        m.record_budget_exhausted();
         m.enter_inflight();
         m.enter_inflight();
         m.exit_inflight();
@@ -230,11 +276,33 @@ mod tests {
         assert_eq!(s.breaker_trips, 1);
         assert_eq!(s.fallbacks, 1);
         assert_eq!(s.panics, 1);
+        assert_eq!(s.hedges, 2);
+        assert_eq!(s.hedge_wins, 1);
+        assert_eq!(s.budget_exhausted, 1);
         assert_eq!(m.inflight(), 1);
         let text = s.render();
-        for field in ["shed=1", "timeouts=1", "trips=1", "fallbacks=1", "panics=1"] {
+        for field in [
+            "shed=1",
+            "timeouts=1",
+            "trips=1",
+            "fallbacks=1",
+            "panics=1",
+            "hedges=2",
+            "hedge_wins=1",
+            "budget_exhausted=1",
+        ] {
             assert!(text.contains(field), "{text}");
         }
+    }
+
+    #[test]
+    fn draining_gauge_flips() {
+        let m = Metrics::new();
+        assert!(!m.is_draining());
+        m.set_draining(true);
+        assert!(m.is_draining());
+        m.set_draining(false);
+        assert!(!m.is_draining());
     }
 
     #[test]

@@ -11,16 +11,28 @@
 //!                   │                                      │
 //!                   │              ┌───────────────────────┤
 //!                   │              ▼                       ▼
-//!                   │      circuit breakers        deadline + retry
-//!                   │      (per engine, trip       (per-attempt budget,
-//!                   │       after N failures)       backoff on faults)
+//!                   │      circuit breakers        request budget +
+//!                   │      (per engine, trip        deadline + retry
+//!                   │       after N failures;      (one Budget shared by
+//!                   │       close after M probe     retries, backoff and
+//!                   │       successes)              fallback hops)
 //!                   │              │                       │
+//!                   │              ├───────► hedged dispatch
+//!                   │              │  (race the next healthy engine
+//!                   │              │   after hedge_delay; first
+//!                   │              │   success wins)
 //!                   │              └───────► engine fallback chain
 //!                   │                 (active_pjrt → active → kdtree → brute)
 //!                   │
-//!                   ├── metrics ◄── trips / sheds / fallbacks / panics
-//!                   └── batcher (groups same-window PJRT queries)
+//!                   ├── metrics ◄── trips / sheds / fallbacks / panics /
+//!                   │               hedges / budget_exhausted / draining
+//!                   └── batcher (groups same-window PJRT queries;
+//!                       deadline counts queue time, expired items drop)
 //! ```
+//!
+//! Shutdown drains: `ServerHandle::shutdown` stops accepting, reports
+//! `status=draining` via HEALTH, lets in-flight connections finish up
+//! to a drain deadline, then force-closes.
 //!
 //! Everything is std-only (tokio is not in the offline vendor set):
 //! a thread-pool accept loop, `mpsc`-based batching, and atomic
@@ -39,6 +51,6 @@ pub mod worker;
 
 pub use metrics::Metrics;
 pub use protocol::{Request, Response};
-pub use resilience::{CircuitBreaker, ResiliencePolicy};
+pub use resilience::{Budget, CircuitBreaker, ResiliencePolicy};
 pub use router::Router;
 pub use server::Server;

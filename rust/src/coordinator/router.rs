@@ -1,20 +1,36 @@
 //! Request router: owns the engine set and dispatches each request
 //! through the resilience ladder — per-engine circuit breakers,
-//! per-attempt deadlines, retry with backoff for transient faults, and
-//! a fallback chain that degrades gracefully toward brute force.
+//! deadline-guarded attempts, retry with backoff for transient faults,
+//! request-scoped deadline budgets, hedged dispatch against the next
+//! healthy fallback engine, and a fallback chain that degrades
+//! gracefully toward brute force.
 //!
 //! Engine *failures* (runtime errors, panics, deadline overruns) walk
 //! the chain; *client* errors (bad k, unknown engine) are returned
 //! immediately — no other engine can fix a malformed request.
+//!
+//! Two dispatch paths share the same attempt/breaker plumbing:
+//!
+//! - **sequential** (default): one engine at a time on the calling
+//!   worker thread, exactly the pre-hedging behaviour;
+//! - **hedged/budgeted** (when `hedge_delay` or `budget` is set):
+//!   attempts run on detached threads so that after `hedge_delay`
+//!   without an answer the same query is fired at the next healthy
+//!   engine and the first success wins, while every retry, backoff
+//!   sleep, and fallback hop draws from one per-request [`Budget`]
+//!   instead of each attempt getting a fresh deadline.
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
-use super::resilience::{is_client_error, is_retryable, CircuitBreaker, ResiliencePolicy};
+use super::resilience::{
+    is_client_error, is_retryable, Budget, CircuitBreaker, ResiliencePolicy,
+};
 use crate::engine::{Neighbor, NnEngine};
 use crate::error::{AsnnError, Result};
 use crate::util::timer::Timer;
@@ -26,7 +42,7 @@ pub const DEFAULT_FALLBACK_CHAIN: [&str; 4] = ["active-pjrt", "active", "kdtree"
 /// Engine registry + dispatch policy.
 pub struct Router {
     engines: HashMap<String, Arc<dyn NnEngine>>,
-    breakers: HashMap<String, CircuitBreaker>,
+    breakers: HashMap<String, Arc<CircuitBreaker>>,
     fallback_chain: Vec<String>,
     policy: ResiliencePolicy,
     default_engine: String,
@@ -34,7 +50,7 @@ pub struct Router {
 }
 
 /// The engine-facing part of a request (small and `Copy` so it can be
-/// re-sent to fallback engines and moved into deadline threads).
+/// re-sent to fallback engines and moved into attempt threads).
 #[derive(Debug, Clone, Copy)]
 enum Query {
     Knn { k: usize, x: f64, y: f64 },
@@ -45,6 +61,10 @@ enum Outcome {
     Hits(Vec<Neighbor>),
     Label(u16),
 }
+
+/// What an attempt thread reports back: which chain slot it ran,
+/// whether it was launched as a hedge, and how it went.
+type AttemptReport = (usize, bool, Result<Outcome>);
 
 fn run_query(engine: &dyn NnEngine, q: Query) -> Result<Outcome> {
     match q {
@@ -60,6 +80,127 @@ fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
         s.clone()
     } else {
         "opaque panic payload".into()
+    }
+}
+
+/// One engine call, guarded: panics are caught and surfaced as runtime
+/// errors; with a deadline set, the call runs on a helper thread and is
+/// abandoned (thread detaches, result discarded) if it overruns.
+///
+/// Panics are counted *where they happen* — the helper thread records
+/// its own panic before reporting, so a panic that lands after
+/// `recv_timeout` has already expired is still counted exactly once
+/// instead of vanishing with the abandoned thread.
+fn guarded(
+    engine: &Arc<dyn NnEngine>,
+    q: Query,
+    deadline: Option<Duration>,
+    metrics: &Arc<Metrics>,
+) -> Result<Outcome> {
+    match deadline {
+        None => catch_unwind(AssertUnwindSafe(|| run_query(engine.as_ref(), q)))
+            .unwrap_or_else(|p| {
+                metrics.record_panic();
+                Err(AsnnError::Runtime(format!("engine panicked: {}", panic_message(p))))
+            }),
+        Some(deadline) => {
+            let (tx, rx) = channel();
+            let engine = Arc::clone(engine);
+            let thread_metrics = Arc::clone(metrics);
+            std::thread::Builder::new()
+                .name("asnn-deadline".into())
+                .spawn(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| run_query(engine.as_ref(), q)))
+                        .unwrap_or_else(|p| {
+                            thread_metrics.record_panic();
+                            Err(AsnnError::Runtime(format!(
+                                "engine panicked: {}",
+                                panic_message(p)
+                            )))
+                        });
+                    let _ = tx.send(r);
+                })
+                .map_err(|e| AsnnError::Coordinator(format!("spawn deadline thread: {e}")))?;
+            match rx.recv_timeout(deadline) {
+                Ok(r) => r,
+                Err(_) => {
+                    metrics.record_timeout();
+                    Err(AsnnError::Timeout(format!(
+                        "engine exceeded {}ms deadline",
+                        deadline.as_millis()
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// Guarded attempt plus retry-with-backoff for transient failures, all
+/// drawing from the request's shared budget: per-attempt deadlines are
+/// clamped to the remaining budget and backoff sleeps never overrun it.
+fn run_attempt(
+    engine: &Arc<dyn NnEngine>,
+    q: Query,
+    policy: &ResiliencePolicy,
+    budget: Budget,
+    metrics: &Arc<Metrics>,
+) -> Result<Outcome> {
+    let mut attempt = 0;
+    loop {
+        let deadline = budget.clamp(policy.deadline);
+        match guarded(engine, q, deadline, metrics) {
+            Ok(out) => return Ok(out),
+            Err(e)
+                if is_retryable(&e)
+                    && attempt < policy.retry.max_retries
+                    && !budget.expired() =>
+            {
+                metrics.record_retry();
+                let backoff = policy.retry.backoff_for(attempt);
+                std::thread::sleep(budget.clamp(Some(backoff)).unwrap_or(backoff));
+                if budget.expired() {
+                    return Err(e);
+                }
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Run one engine's full attempt (with retries) and settle its breaker:
+/// successes close or credit it, failures feed it (counting trips), and
+/// client errors leave it untouched. Runs on the dispatching worker
+/// thread in the sequential path and on a detached thread when hedging,
+/// so a hedged loser that eventually fails still trains its breaker.
+fn settle_attempt(
+    engine: &Arc<dyn NnEngine>,
+    breaker: &Arc<CircuitBreaker>,
+    q: Query,
+    policy: &ResiliencePolicy,
+    budget: Budget,
+    metrics: &Arc<Metrics>,
+) -> Result<Outcome> {
+    let res = run_attempt(engine, q, policy, budget, metrics);
+    match &res {
+        Ok(_) => breaker.record_success(),
+        Err(e) if is_client_error(e) => {}
+        Err(_) => {
+            if breaker.record_failure() {
+                metrics.record_trip();
+            }
+        }
+    }
+    res
+}
+
+fn budget_exhausted_error(budget: Budget, last_err: Option<AsnnError>) -> AsnnError {
+    let total_ms = budget.total().map(|d| d.as_millis()).unwrap_or(0);
+    match last_err {
+        Some(e) => AsnnError::Timeout(format!(
+            "request budget {total_ms}ms exhausted (last error: {e})"
+        )),
+        None => AsnnError::Timeout(format!("request budget {total_ms}ms exhausted")),
     }
 }
 
@@ -85,7 +226,8 @@ impl Router {
 
     pub fn register(&mut self, name: impl Into<String>, engine: Arc<dyn NnEngine>) {
         let name = name.into();
-        self.breakers.insert(name.clone(), CircuitBreaker::new(self.policy.breaker));
+        self.breakers
+            .insert(name.clone(), Arc::new(CircuitBreaker::new(self.policy.breaker)));
         self.engines.insert(name, engine);
     }
 
@@ -135,7 +277,9 @@ impl Router {
     }
 
     /// One-line readiness report: overall status, default engine,
-    /// queue depth, engine set, and per-engine breaker states.
+    /// queue depth, engine set, and per-engine breaker states. A
+    /// draining server reports `status=draining` so load balancers
+    /// stop sending it traffic before the listener actually closes.
     fn health_line(&self) -> String {
         let breakers: Vec<String> = self
             .breaker_states()
@@ -147,9 +291,16 @@ impl Router {
             .get(&self.default_engine)
             .map(|b| b.is_open())
             .unwrap_or(true);
+        let status = if self.metrics.is_draining() {
+            "draining"
+        } else if default_open {
+            "degraded"
+        } else {
+            "ok"
+        };
         format!(
             "status={} default={} queue_depth={} engines={} breakers={}",
-            if default_open { "degraded" } else { "ok" },
+            status,
             self.default_engine,
             self.metrics.inflight(),
             self.engine_names().join(","),
@@ -171,72 +322,6 @@ impl Router {
         chain
     }
 
-    /// One engine attempt, guarded: panics are caught and surfaced as
-    /// runtime errors; with a deadline set, the call runs on a helper
-    /// thread and is abandoned (thread detaches, result discarded) if
-    /// it overruns.
-    fn guarded(&self, engine: &Arc<dyn NnEngine>, q: Query) -> Result<Outcome> {
-        match self.policy.deadline {
-            None => catch_unwind(AssertUnwindSafe(|| run_query(engine.as_ref(), q)))
-                .unwrap_or_else(|p| {
-                    self.metrics.record_panic();
-                    Err(AsnnError::Runtime(format!("engine panicked: {}", panic_message(p))))
-                }),
-            Some(deadline) => {
-                let (tx, rx) = channel();
-                let engine = Arc::clone(engine);
-                std::thread::Builder::new()
-                    .name("asnn-deadline".into())
-                    .spawn(move || {
-                        let r = catch_unwind(AssertUnwindSafe(|| run_query(engine.as_ref(), q)))
-                            .unwrap_or_else(|p| {
-                                Err(AsnnError::Runtime(format!(
-                                    "engine panicked: {}",
-                                    panic_message(p)
-                                )))
-                            });
-                        let _ = tx.send(r);
-                    })
-                    .map_err(|e| {
-                        AsnnError::Coordinator(format!("spawn deadline thread: {e}"))
-                    })?;
-                match rx.recv_timeout(deadline) {
-                    Ok(r) => {
-                        if let Err(e) = &r {
-                            if matches!(e, AsnnError::Runtime(m) if m.starts_with("engine panicked")) {
-                                self.metrics.record_panic();
-                            }
-                        }
-                        r
-                    }
-                    Err(_) => {
-                        self.metrics.record_timeout();
-                        Err(AsnnError::Timeout(format!(
-                            "engine exceeded {}ms deadline",
-                            deadline.as_millis()
-                        )))
-                    }
-                }
-            }
-        }
-    }
-
-    /// Guarded attempt plus retry-with-backoff for transient failures.
-    fn attempt(&self, engine: &Arc<dyn NnEngine>, q: Query) -> Result<Outcome> {
-        let mut attempt = 0;
-        loop {
-            match self.guarded(engine, q) {
-                Ok(out) => return Ok(out),
-                Err(e) if is_retryable(&e) && attempt < self.policy.retry.max_retries => {
-                    self.metrics.record_retry();
-                    std::thread::sleep(self.policy.retry.backoff_for(attempt));
-                    attempt += 1;
-                }
-                Err(e) => return Err(e),
-            }
-        }
-    }
-
     fn dispatch(&self, q: Query, engine_override: Option<&str>) -> Response {
         let requested = engine_override.unwrap_or(&self.default_engine);
         if !self.engines.contains_key(requested) {
@@ -247,47 +332,183 @@ impl Router {
             )));
         }
         let t = Timer::new();
+        let outcome = if self.policy.hedge_delay.is_some() || self.policy.budget.is_some() {
+            self.dispatch_hedged(q, requested)
+        } else {
+            self.dispatch_sequential(q, requested)
+        };
+        match outcome {
+            Ok(Outcome::Hits(hits)) => {
+                self.metrics.record_knn(t.elapsed_ns());
+                Response::Neighbors(hits)
+            }
+            Ok(Outcome::Label(label)) => {
+                self.metrics.record_classify(t.elapsed_ns());
+                Response::Label(label)
+            }
+            Err(e) => {
+                self.metrics.record_error();
+                Response::from_error(&e)
+            }
+        }
+    }
+
+    /// Classic path: walk the chain one engine at a time on the calling
+    /// thread. Used whenever neither hedging nor budgeting is enabled,
+    /// so the default configuration pays no extra thread per request.
+    fn dispatch_sequential(&self, q: Query, requested: &str) -> Result<Outcome> {
+        let budget = Budget::unlimited();
         let mut last_err: Option<AsnnError> = None;
         for name in self.chain_for(requested) {
             let breaker = &self.breakers[name];
             if !breaker.allow() {
                 continue; // circuit open: skip without spending an attempt
             }
-            match self.attempt(&self.engines[name], q) {
+            match settle_attempt(&self.engines[name], breaker, q, &self.policy, budget, &self.metrics)
+            {
                 Ok(out) => {
-                    breaker.record_success();
                     if name != requested {
                         self.metrics.record_fallback();
                     }
-                    return match out {
-                        Outcome::Hits(hits) => {
-                            self.metrics.record_knn(t.elapsed_ns());
-                            Response::Neighbors(hits)
-                        }
-                        Outcome::Label(label) => {
-                            self.metrics.record_classify(t.elapsed_ns());
-                            Response::Label(label)
-                        }
-                    };
+                    return Ok(out);
                 }
-                Err(e) if is_client_error(&e) => {
-                    // the request itself is bad; no engine will do better
-                    self.metrics.record_error();
-                    return Response::from_error(&e);
+                Err(e) if is_client_error(&e) => return Err(e),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            AsnnError::Coordinator("no engine available: all circuits open".into())
+        }))
+    }
+
+    /// Hedged / budgeted path: attempts run on detached threads feeding
+    /// one channel; the event loop launches the next chain engine when
+    /// nothing is in flight (fallback), races a hedge after
+    /// `hedge_delay` without an answer, and gives up when the budget is
+    /// gone. The first success wins; a losing attempt's result is
+    /// discarded when it eventually lands (its breaker bookkeeping
+    /// still runs on its own thread).
+    fn dispatch_hedged(&self, q: Query, requested: &str) -> Result<Outcome> {
+        let budget = Budget::start(self.policy.budget);
+        let chain = self.chain_for(requested);
+        let (tx, rx) = channel::<AttemptReport>();
+        let mut next = 0usize; // next chain slot to consider
+        let mut inflight = 0usize;
+        let mut last_err: Option<AsnnError> = None;
+        loop {
+            if inflight == 0 {
+                if budget.expired() {
+                    self.metrics.record_budget_exhausted();
+                    return Err(budget_exhausted_error(budget, last_err));
                 }
-                Err(e) => {
-                    if breaker.record_failure() {
-                        self.metrics.record_trip();
+                if self.launch(&chain, &mut next, false, q, budget, &tx) {
+                    inflight += 1;
+                } else {
+                    return Err(last_err.unwrap_or_else(|| {
+                        AsnnError::Coordinator("no engine available: all circuits open".into())
+                    }));
+                }
+            }
+            // wait for the next report, but no longer than the hedge
+            // delay (when another engine could take a hedge) or the
+            // remaining budget
+            let hedge_wait = match self.policy.hedge_delay {
+                Some(d) if self.has_launchable(&chain, next) => Some(d),
+                _ => None,
+            };
+            let wait = match (hedge_wait, budget.remaining()) {
+                (Some(h), Some(r)) => Some(h.min(r)),
+                (Some(h), None) => Some(h),
+                (None, Some(r)) => Some(r),
+                (None, None) => None,
+            };
+            let report = match wait {
+                Some(w) => rx.recv_timeout(w),
+                None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            };
+            match report {
+                Ok((idx, was_hedge, Ok(out))) => {
+                    if was_hedge {
+                        self.metrics.record_hedge_win();
+                    }
+                    if chain[idx] != requested {
+                        self.metrics.record_fallback();
+                    }
+                    return Ok(out);
+                }
+                Ok((_, _, Err(e))) => {
+                    inflight -= 1;
+                    if is_client_error(&e) {
+                        return Err(e);
                     }
                     last_err = Some(e);
+                    // loop: keep waiting if a hedge is still running,
+                    // otherwise launch the next chain engine
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if budget.expired() {
+                        self.metrics.record_budget_exhausted();
+                        return Err(budget_exhausted_error(budget, last_err));
+                    }
+                    if hedge_wait.is_some()
+                        && self.launch(&chain, &mut next, true, q, budget, &tx)
+                    {
+                        self.metrics.record_hedge();
+                        inflight += 1;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // unreachable while attempts are in flight (each
+                    // thread owns a sender clone); fail closed anyway
+                    return Err(last_err.unwrap_or_else(|| {
+                        AsnnError::Coordinator("attempt channel closed".into())
+                    }));
                 }
             }
         }
-        self.metrics.record_error();
-        let err = last_err.unwrap_or_else(|| {
-            AsnnError::Coordinator("no engine available: all circuits open".into())
-        });
-        Response::from_error(&err)
+    }
+
+    /// Is any not-yet-tried chain entry currently admissible? Peeks
+    /// breakers without consuming their probe slot.
+    fn has_launchable(&self, chain: &[&str], next: usize) -> bool {
+        chain[next..].iter().any(|name| self.breakers[*name].would_allow())
+    }
+
+    /// Launch the next admissible engine at or after `next` on a
+    /// detached thread; returns whether an attempt actually started.
+    fn launch(
+        &self,
+        chain: &[&str],
+        next: &mut usize,
+        is_hedge: bool,
+        q: Query,
+        budget: Budget,
+        tx: &Sender<AttemptReport>,
+    ) -> bool {
+        while *next < chain.len() {
+            let idx = *next;
+            *next += 1;
+            let name = chain[idx];
+            let breaker = Arc::clone(&self.breakers[name]);
+            if !breaker.allow() {
+                continue; // circuit open: skip without spending an attempt
+            }
+            let engine = Arc::clone(&self.engines[name]);
+            let metrics = Arc::clone(&self.metrics);
+            let policy = self.policy;
+            let tx = tx.clone();
+            let spawned = std::thread::Builder::new()
+                .name("asnn-attempt".into())
+                .spawn(move || {
+                    let res = settle_attempt(&engine, &breaker, q, &policy, budget, &metrics);
+                    let _ = tx.send((idx, is_hedge, res));
+                });
+            if spawned.is_ok() {
+                return true;
+            }
+            // spawn failure: skip this engine and keep walking the chain
+        }
+        false
     }
 }
 
@@ -383,7 +604,11 @@ mod tests {
         let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 92)));
         let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
         let policy = ResiliencePolicy {
-            breaker: BreakerPolicy { threshold: 3, cooldown: Duration::from_secs(60) },
+            breaker: BreakerPolicy {
+                threshold: 3,
+                cooldown: Duration::from_secs(60),
+                ..BreakerPolicy::default()
+            },
             ..ResiliencePolicy::default()
         };
         let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
@@ -446,6 +671,47 @@ mod tests {
     }
 
     #[test]
+    fn panic_after_deadline_expiry_is_still_counted() {
+        // the engine sleeps past the deadline and then panics: the
+        // request sees a timeout, and the panic landing later on the
+        // abandoned helper thread must still be recorded (regression
+        // test for the uncounted-panic bug)
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(500, 96)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let policy = ResiliencePolicy {
+            deadline: Some(Duration::from_millis(20)),
+            fallback_enabled: false,
+            ..ResiliencePolicy::default()
+        };
+        let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
+        let chaos = ChaosEngine::new(
+            brute,
+            crate::engine::chaos::ChaosConfig {
+                latency_rate: 1.0,
+                latency: Duration::from_millis(80),
+                panic_rate: 1.0,
+                seed: 11,
+                ..Default::default()
+            },
+        );
+        r.register("chaos", Arc::new(chaos));
+        match r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }) {
+            Response::Error { domain, .. } => assert_eq!(domain, "timeout"),
+            other => panic!("{other:?}"),
+        }
+        // give the abandoned helper thread time to panic and report
+        let mut recorded = 0;
+        for _ in 0..50 {
+            recorded = r.metrics().snapshot().panics;
+            if recorded == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(recorded, 1, "late panic was not counted");
+    }
+
+    #[test]
     fn transient_errors_are_retried() {
         // error_rate 0.5: with 4 retries per request, 20 requests all
         // succeed with overwhelming probability, and retries are counted
@@ -454,7 +720,11 @@ mod tests {
         let policy = ResiliencePolicy {
             retry: RetryPolicy { max_retries: 4, backoff: Duration::from_micros(100) },
             fallback_enabled: false,
-            breaker: BreakerPolicy { threshold: 1000, cooldown: Duration::from_secs(60) },
+            breaker: BreakerPolicy {
+                threshold: 1000,
+                cooldown: Duration::from_secs(60),
+                ..BreakerPolicy::default()
+            },
             ..ResiliencePolicy::default()
         };
         let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
@@ -481,6 +751,61 @@ mod tests {
     }
 
     #[test]
+    fn hedge_races_slow_primary_and_fast_fallback_wins() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1500, 97)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let policy = ResiliencePolicy {
+            hedge_delay: Some(Duration::from_millis(25)),
+            ..ResiliencePolicy::default()
+        };
+        let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
+        r.register(
+            "chaos",
+            Arc::new(ChaosEngine::slow(Arc::clone(&brute), Duration::from_millis(400), 12)),
+        );
+        r.register("brute", brute);
+        r.set_fallback_chain(vec!["brute".into()]);
+
+        let t0 = std::time::Instant::now();
+        match r.handle(&Request::Knn { k: 5, x: 0.5, y: 0.5, engine: None }) {
+            Response::Neighbors(hits) => assert_eq!(hits.len(), 5),
+            other => panic!("{other:?}"),
+        }
+        // the hedge answered long before the 400ms primary finished
+        assert!(t0.elapsed() < Duration::from_millis(300), "{:?}", t0.elapsed());
+        let s = r.metrics().snapshot();
+        assert_eq!(s.hedges, 1, "{s:?}");
+        assert_eq!(s.hedge_wins, 1, "{s:?}");
+        assert_eq!(s.fallbacks, 1, "{s:?}");
+        assert_eq!(s.errors, 0, "{s:?}");
+    }
+
+    #[test]
+    fn budget_bounds_slow_engine_without_per_attempt_deadline() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 98)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let policy = ResiliencePolicy {
+            budget: Some(Duration::from_millis(50)),
+            fallback_enabled: false,
+            ..ResiliencePolicy::default()
+        };
+        let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
+        r.register(
+            "chaos",
+            Arc::new(ChaosEngine::slow(brute, Duration::from_millis(400), 13)),
+        );
+        let t0 = std::time::Instant::now();
+        match r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }) {
+            Response::Error { domain, .. } => assert_eq!(domain, "timeout"),
+            other => panic!("{other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_millis(250), "{:?}", t0.elapsed());
+        let s = r.metrics().snapshot();
+        assert_eq!(s.budget_exhausted, 1, "{s:?}");
+        assert!(s.timeouts >= 1, "{s:?}");
+    }
+
+    #[test]
     fn health_line_reports_state() {
         let r = router();
         match r.handle(&Request::Health) {
@@ -492,6 +817,16 @@ mod tests {
                 assert!(t.contains("active:closed"), "{t}");
                 assert!(t.contains("brute:closed"), "{t}");
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn health_line_reports_draining() {
+        let r = router();
+        r.metrics().set_draining(true);
+        match r.handle(&Request::Health) {
+            Response::Text(t) => assert!(t.contains("status=draining"), "{t}"),
             other => panic!("{other:?}"),
         }
     }

@@ -8,12 +8,20 @@
 //! counted and backed off (no hot-looping on a sick listener), and a
 //! job that cannot be queued on a shut-down pool is dropped with an
 //! error counter rather than panicking the accept loop.
+//!
+//! Shutdown is a two-phase drain: `ServerHandle::shutdown` first flips
+//! the draining flag (listener closes, HEALTH reports
+//! `status=draining`, connections finish their current request and
+//! close), waits up to `drain_deadline` for in-flight connections to
+//! reach zero, then sets the hard stop flag and joins. Both `shutdown`
+//! and `Drop` funnel through one idempotent `stop_and_join`, so
+//! double-shutdown and shutdown-then-drop are safe.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
@@ -28,6 +36,9 @@ pub struct Server {
     /// Admission limit: connections admitted but not yet finished.
     /// 0 = unlimited (no shedding).
     max_inflight: usize,
+    /// How long shutdown waits for in-flight connections to finish
+    /// before force-closing them.
+    drain_deadline: Duration,
 }
 
 /// Decrements the in-flight gauge when a connection finishes, even if
@@ -44,39 +55,69 @@ impl Drop for InflightGuard {
 pub struct ServerHandle {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    drain_deadline: Duration,
+    metrics: Arc<Metrics>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Signal shutdown and wait for the accept loop to exit.
+    /// Graceful shutdown: stop accepting, let in-flight connections
+    /// finish up to the drain deadline, then force-close and join.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.stop_and_join();
+    }
+
+    /// The idempotent core shared by `shutdown` and `Drop`: a second
+    /// call (or a drop after shutdown) finds `join` already taken and
+    /// returns immediately.
+    fn stop_and_join(&mut self) {
+        let Some(join) = self.join.take() else { return };
+        // phase 1: drain. New connections stop being accepted, HEALTH
+        // reports status=draining, existing connections close after
+        // their current request.
+        self.draining.store(true, Ordering::SeqCst);
+        self.metrics.set_draining(true);
         // nudge the blocking accept() with a no-op connection
         let _ = TcpStream::connect(self.addr);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+        let t0 = Instant::now();
+        while self.metrics.inflight() > 0 && t0.elapsed() < self.drain_deadline {
+            std::thread::sleep(Duration::from_millis(5));
         }
+        // phase 2: hard stop for anything that outlived the deadline.
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        let _ = join.join();
+        self.metrics.set_draining(false);
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.stop_and_join();
     }
 }
 
 impl Server {
     pub fn new(router: Arc<Router>, workers: usize) -> Self {
-        Self { router, workers: workers.max(1), max_inflight: 0 }
+        Self {
+            router,
+            workers: workers.max(1),
+            max_inflight: 0,
+            drain_deadline: Duration::from_millis(500),
+        }
     }
 
     /// Shed connections once `n` are in flight (0 = unlimited).
     pub fn with_max_inflight(mut self, n: usize) -> Self {
         self.max_inflight = n;
+        self
+    }
+
+    /// How long `shutdown` waits for in-flight connections before
+    /// force-closing them.
+    pub fn with_drain_deadline(mut self, d: Duration) -> Self {
+        self.drain_deadline = d;
         self
     }
 
@@ -89,7 +130,10 @@ impl Server {
             .local_addr()
             .map_err(|e| AsnnError::Coordinator(format!("local_addr: {e}")))?;
         let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let draining2 = Arc::clone(&draining);
+        let handle_metrics = Arc::clone(self.router.metrics());
         let router = Arc::clone(&self.router);
         let workers = self.workers;
         let max_inflight = self.max_inflight;
@@ -104,7 +148,7 @@ impl Server {
                 );
                 let mut accept_failures = 0u32;
                 for conn in listener.incoming() {
-                    if stop2.load(Ordering::SeqCst) {
+                    if stop2.load(Ordering::SeqCst) || draining2.load(Ordering::SeqCst) {
                         break;
                     }
                     match conn {
@@ -120,9 +164,15 @@ impl Server {
                             let guard = InflightGuard(Arc::clone(&metrics));
                             let conn_router = Arc::clone(&router);
                             let conn_stop = Arc::clone(&stop2);
+                            let conn_draining = Arc::clone(&draining2);
                             let queued = pool.execute(move || {
                                 let _inflight = guard;
-                                let _ = handle_connection(stream, &conn_router, &conn_stop);
+                                let _ = handle_connection(
+                                    stream,
+                                    &conn_router,
+                                    &conn_stop,
+                                    &conn_draining,
+                                );
                             });
                             if queued.is_err() {
                                 // shutdown raced the accept loop: the job
@@ -142,9 +192,19 @@ impl Server {
                         }
                     }
                 }
+                // close the listening port before joining the pool so a
+                // draining server stops looking connectable right away
+                drop(listener);
             })
             .map_err(|e| AsnnError::Coordinator(format!("spawn accept loop: {e}")))?;
-        Ok(ServerHandle { addr: local, stop, join: Some(join) })
+        Ok(ServerHandle {
+            addr: local,
+            stop,
+            draining,
+            drain_deadline: self.drain_deadline,
+            metrics: handle_metrics,
+            join: Some(join),
+        })
     }
 }
 
@@ -163,13 +223,15 @@ fn shed(stream: TcpStream, metrics: &Metrics) {
 }
 
 /// Serve one connection until QUIT/EOF/server-stop. Reads use a short
-/// timeout so idle connections observe the stop flag — otherwise a
-/// worker blocked in `read_line` would deadlock server shutdown while
-/// any client keeps its connection open.
+/// timeout so idle connections observe the stop and drain flags —
+/// otherwise a worker blocked in `read_line` would deadlock server
+/// shutdown while any client keeps its connection open. While draining,
+/// the current request is still answered, then the connection closes.
 fn handle_connection(
     stream: TcpStream,
     router: &Router,
     stop: &AtomicBool,
+    draining: &AtomicBool,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100))).ok();
@@ -184,8 +246,9 @@ fn handle_connection(
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // keep any partial line already buffered; just poll stop
-                if stop.load(Ordering::SeqCst) {
+                // keep any partial line already buffered; just poll the
+                // shutdown flags
+                if stop.load(Ordering::SeqCst) || draining.load(Ordering::SeqCst) {
                     break;
                 }
                 continue;
@@ -210,6 +273,11 @@ fn handle_connection(
         };
         writeln!(writer, "{}", response.format())?;
         writer.flush()?;
+        // graceful drain: this request was answered; close instead of
+        // waiting for the next one
+        if stop.load(Ordering::SeqCst) || draining.load(Ordering::SeqCst) {
+            break;
+        }
     }
     Ok(())
 }
@@ -382,5 +450,43 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         assert!(line.starts_with("ERR protocol"), "{line}");
         handle.shutdown();
+    }
+
+    #[test]
+    fn drop_after_shutdown_is_safe() {
+        // shutdown consumes the handle, but Drop still runs on it —
+        // stop_and_join must be idempotent
+        let handle = spawn_server();
+        let addr = handle.addr;
+        handle.shutdown();
+        // and a plain drop without shutdown also stops the server
+        let handle2 = spawn_server();
+        drop(handle2);
+        // both listeners are gone
+        for a in [addr] {
+            std::thread::sleep(Duration::from_millis(20));
+            assert!(
+                TcpStream::connect(a).is_err()
+                    || Client::connect(&a)
+                        .and_then(|mut c| c.call(&Request::Ping))
+                        .is_err(),
+                "server still serving after shutdown"
+            );
+        }
+    }
+
+    #[test]
+    fn draining_connection_closes_after_current_request() {
+        let handle = spawn_server();
+        let mut client = Client::connect(&handle.addr).unwrap();
+        assert_eq!(client.call(&Request::Ping).unwrap(), Response::Text("pong".into()));
+        let t0 = Instant::now();
+        handle.shutdown();
+        // drain noticed the idle connection quickly (well under the
+        // 500ms default deadline: the 100ms read poll sees the flag)
+        assert!(t0.elapsed() < Duration::from_millis(450), "{:?}", t0.elapsed());
+        // connection is now closed from the server side
+        let r = client.call(&Request::Ping);
+        assert!(r.is_err(), "{r:?}");
     }
 }

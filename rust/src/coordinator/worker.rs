@@ -53,8 +53,9 @@ impl ThreadPool {
             respawns: AtomicU64::new(0),
             observer,
         });
-        let handles =
-            (0..threads).map(|i| spawn_worker(i, Arc::clone(&shared))).collect();
+        let handles = (0..threads)
+            .map(|i| spawn_worker(i, Arc::clone(&shared)).expect("spawn worker"))
+            .collect();
         Self { tx: Some(tx), handles, shared }
     }
 
@@ -94,11 +95,13 @@ impl ThreadPool {
     }
 }
 
-fn spawn_worker(idx: usize, shared: Arc<PoolShared>) -> JoinHandle<()> {
+/// Fallible so the respawn path (which runs during a panic unwind)
+/// can swallow a spawn failure instead of aborting the process with a
+/// double panic; pool construction still expects success.
+fn spawn_worker(idx: usize, shared: Arc<PoolShared>) -> std::io::Result<JoinHandle<()>> {
     std::thread::Builder::new()
         .name(format!("asnn-worker-{idx}"))
         .spawn(move || worker_loop(idx, shared))
-        .expect("spawn worker")
 }
 
 /// Backstop for panics that escape `catch_unwind`: if the worker

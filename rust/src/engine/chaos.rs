@@ -27,6 +27,11 @@ pub struct ChaosConfig {
     /// Probability of sleeping `latency` before proceeding.
     pub latency_rate: f64,
     pub latency: Duration,
+    /// Flapping: alternate sick/healthy windows of this many *calls*
+    /// (deterministic, unlike wall-clock flapping). Calls 0..p fail,
+    /// p..2p succeed, and so on. 0 = off. Checked before the rate rolls;
+    /// a sick-window failure counts as an injected error.
+    pub flap_period: u64,
     pub seed: u64,
 }
 
@@ -37,6 +42,7 @@ impl Default for ChaosConfig {
             panic_rate: 0.0,
             latency_rate: 0.0,
             latency: Duration::from_millis(50),
+            flap_period: 0,
             seed: 0xC4A05,
         }
     }
@@ -55,6 +61,7 @@ pub struct ChaosEngine {
     inner: Arc<dyn NnEngine>,
     cfg: ChaosConfig,
     rng: Mutex<Rng>,
+    calls: AtomicU64,
     errors: AtomicU64,
     panics: AtomicU64,
     delays: AtomicU64,
@@ -66,6 +73,7 @@ impl ChaosEngine {
             inner,
             cfg,
             rng: Mutex::new(Rng::new(cfg.seed)),
+            calls: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             panics: AtomicU64::new(0),
             delays: AtomicU64::new(0),
@@ -90,6 +98,14 @@ impl ChaosEngine {
         )
     }
 
+    /// Alternates sick and healthy windows of `period` calls each:
+    /// calls 0..period fail, period..2·period succeed, and so on.
+    /// Deterministic in call count, so tests can script exactly which
+    /// breaker probes land in which window.
+    pub fn flapping(inner: Arc<dyn NnEngine>, period: u64, seed: u64) -> Self {
+        Self::new(inner, ChaosConfig { flap_period: period, seed, ..ChaosConfig::default() })
+    }
+
     pub fn counts(&self) -> ChaosCounts {
         ChaosCounts {
             errors: self.errors.load(Ordering::Relaxed),
@@ -102,6 +118,15 @@ impl ChaosEngine {
     /// lock is released before sleeping/panicking so a stuck or
     /// unwinding call never poisons other callers.
     fn inject(&self) -> Result<()> {
+        if self.cfg.flap_period > 0 {
+            let call = self.calls.fetch_add(1, Ordering::SeqCst);
+            if (call / self.cfg.flap_period) % 2 == 0 {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                return Err(AsnnError::Runtime(format!(
+                    "chaos: flapping sick window (call {call})"
+                )));
+            }
+        }
         let (delay_roll, panic_roll, error_roll) = {
             let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
             (rng.next_f64(), rng.next_f64(), rng.next_f64())
@@ -202,6 +227,23 @@ mod tests {
         chaos.knn(&[0.5, 0.5], 3).unwrap();
         assert!(t.elapsed() >= Duration::from_millis(25), "{:?}", t.elapsed());
         assert_eq!(chaos.counts().delays, 1);
+    }
+
+    #[test]
+    fn flapping_alternates_sick_and_healthy_windows() {
+        let chaos = ChaosEngine::flapping(inner(), 3, 4);
+        let outcomes: Vec<bool> =
+            (0..12).map(|_| chaos.knn(&[0.5, 0.5], 3).is_ok()).collect();
+        assert_eq!(
+            outcomes,
+            vec![
+                false, false, false, // calls 0..3: sick
+                true, true, true, // 3..6: healthy
+                false, false, false, // 6..9: sick again
+                true, true, true,
+            ]
+        );
+        assert_eq!(chaos.counts().errors, 6);
     }
 
     #[test]

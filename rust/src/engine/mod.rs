@@ -14,6 +14,7 @@
 
 pub mod active;
 pub mod active3d;
+#[cfg(feature = "pjrt")]
 pub mod active_pjrt;
 pub mod brute;
 pub mod chaos;

@@ -18,6 +18,7 @@ use asnn::coordinator::{Metrics, ResiliencePolicy, Router, Server};
 use asnn::data::synthetic::{generate, generate_queries, Family, SyntheticSpec};
 use asnn::data::{io as dio, Dataset};
 use asnn::engine::active::{ActiveEngine, ActiveParams};
+#[cfg(feature = "pjrt")]
 use asnn::engine::active_pjrt::ActivePjrtEngine;
 use asnn::engine::brute::BruteEngine;
 use asnn::engine::kdtree::KdTreeEngine;
@@ -25,6 +26,7 @@ use asnn::engine::lsh::{LshEngine, LshParams};
 use asnn::engine::NnEngine;
 use asnn::error::{AsnnError, Result};
 use asnn::grid::MultiGrid;
+#[cfg(feature = "pjrt")]
 use asnn::runtime::RuntimeService;
 use asnn::util::cli::Args;
 use asnn::util::timer::Timer;
@@ -151,9 +153,16 @@ fn build_engine(cfg: &AsnnConfig, ds: Arc<Dataset>) -> Result<Arc<dyn NnEngine>>
         EngineKind::Active => {
             Arc::new(ActiveEngine::new(ds, cfg.grid.resolution, active_params(cfg))?)
         }
+        #[cfg(feature = "pjrt")]
         EngineKind::ActivePjrt => {
             let service = RuntimeService::spawn(Path::new(&cfg.runtime.artifacts_dir).into())?;
             Arc::new(ActivePjrtEngine::new(ds, cfg.grid.resolution, active_params(cfg), service)?)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        EngineKind::ActivePjrt => {
+            return Err(AsnnError::Config(
+                "engine \"active-pjrt\" requires building with the `pjrt` feature".into(),
+            ))
         }
     })
 }
@@ -269,6 +278,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Arc::new(ActiveEngine::new(ds.clone(), cfg.grid.resolution, active_params(&cfg))?),
     );
     let artifacts = Path::new(&cfg.runtime.artifacts_dir);
+    #[cfg(feature = "pjrt")]
     if artifacts.join("manifest.toml").exists() {
         let service = RuntimeService::spawn(artifacts.into())?;
         router.register(
@@ -284,12 +294,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         println!("no artifacts at {} — PJRT engine disabled", artifacts.display());
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!(
+        "built without the pjrt feature — PJRT engine disabled (artifacts dir: {})",
+        artifacts.display()
+    );
     let server = Server::new(Arc::new(router), cfg.server.workers)
-        .with_max_inflight(cfg.resilience.max_inflight);
+        .with_max_inflight(cfg.resilience.max_inflight)
+        .with_drain_deadline(std::time::Duration::from_millis(
+            cfg.resilience.drain_deadline_ms,
+        ));
     let handle = server.spawn(&cfg.server.addr)?;
     println!(
-        "serving on {} (engines ready; deadline={}ms max_inflight={}; Ctrl-C to stop)",
-        handle.addr, cfg.resilience.deadline_ms, cfg.resilience.max_inflight
+        "serving on {} (engines ready; deadline={}ms budget={}ms hedge={}ms \
+         max_inflight={}; Ctrl-C to stop)",
+        handle.addr,
+        cfg.resilience.deadline_ms,
+        cfg.resilience.budget_ms,
+        cfg.resilience.hedge_delay_ms,
+        cfg.resilience.max_inflight
     );
     // block forever (no signal handling crates offline; Ctrl-C kills us)
     loop {

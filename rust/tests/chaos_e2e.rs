@@ -64,7 +64,11 @@ fn stat(text: &str, field: &str) -> u64 {
 #[test]
 fn panicking_engine_trips_breaker_onto_fallback_and_server_stays_up() {
     let policy = ResiliencePolicy {
-        breaker: BreakerPolicy { threshold: 3, cooldown: Duration::from_secs(60) },
+        breaker: BreakerPolicy {
+            threshold: 3,
+            cooldown: Duration::from_secs(60),
+            ..BreakerPolicy::default()
+        },
         ..ResiliencePolicy::default()
     };
     let router = Arc::new(chaos_router(
@@ -108,7 +112,11 @@ fn panicking_engine_trips_breaker_onto_fallback_and_server_stays_up() {
 fn injected_errors_are_retried_then_fall_back() {
     let policy = ResiliencePolicy {
         retry: RetryPolicy { max_retries: 2, backoff: Duration::from_micros(200) },
-        breaker: BreakerPolicy { threshold: 4, cooldown: Duration::from_secs(60) },
+        breaker: BreakerPolicy {
+            threshold: 4,
+            cooldown: Duration::from_secs(60),
+            ..BreakerPolicy::default()
+        },
         ..ResiliencePolicy::default()
     };
     let router = Arc::new(chaos_router(
@@ -139,7 +147,11 @@ fn injected_errors_are_retried_then_fall_back() {
 fn latency_beyond_deadline_times_out_onto_fallback() {
     let policy = ResiliencePolicy {
         deadline: Some(Duration::from_millis(40)),
-        breaker: BreakerPolicy { threshold: 2, cooldown: Duration::from_secs(60) },
+        breaker: BreakerPolicy {
+            threshold: 2,
+            cooldown: Duration::from_secs(60),
+            ..BreakerPolicy::default()
+        },
         ..ResiliencePolicy::default()
     };
     let router = Arc::new(chaos_router(
@@ -212,7 +224,11 @@ fn mixed_chaos_under_concurrent_load_never_loses_a_request() {
     let policy = ResiliencePolicy {
         deadline: Some(Duration::from_millis(150)),
         retry: RetryPolicy { max_retries: 1, backoff: Duration::from_micros(200) },
-        breaker: BreakerPolicy { threshold: 4, cooldown: Duration::from_millis(200) },
+        breaker: BreakerPolicy {
+            threshold: 4,
+            cooldown: Duration::from_millis(200),
+            ..BreakerPolicy::default()
+        },
         ..ResiliencePolicy::default()
     };
     let router = Arc::new(chaos_router(
@@ -259,4 +275,210 @@ fn mixed_chaos_under_concurrent_load_never_loses_a_request() {
     assert_eq!(stat(&s, "errors"), 0, "{s}");
     assert_eq!(stat(&s, "knn") , 47, "{s}"); // 45 load + 2 verification
     handle.shutdown();
+}
+
+#[test]
+fn hedged_request_wins_with_fallback_answer_while_slow_engine_still_running() {
+    // the default engine takes 400ms per call; with a 30ms hedge delay
+    // the router fires the same query at brute and returns its answer
+    // long before the slow engine finishes
+    let policy = ResiliencePolicy {
+        hedge_delay: Some(Duration::from_millis(30)),
+        ..ResiliencePolicy::default()
+    };
+    let router = Arc::new(chaos_router(
+        ChaosConfig {
+            latency_rate: 1.0,
+            latency: Duration::from_millis(400),
+            seed: 6,
+            ..ChaosConfig::default()
+        },
+        policy,
+        2000,
+        607,
+    ));
+    let handle = Server::new(Arc::clone(&router), 2).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+
+    let truth = knn_ids(&mut c, 7, Some("brute"));
+    let t0 = std::time::Instant::now();
+    assert_eq!(knn_ids(&mut c, 7, None), truth);
+    // far less than the 400ms the hedged-against engine needs
+    assert!(t0.elapsed() < Duration::from_millis(250), "{:?}", t0.elapsed());
+
+    let s = stats(&mut c);
+    assert_eq!(stat(&s, "hedges"), 1, "{s}");
+    assert_eq!(stat(&s, "hedge_wins"), 1, "{s}");
+    assert!(stat(&s, "fallbacks") >= 1, "{s}");
+    assert_eq!(stat(&s, "errors"), 0, "{s}");
+    handle.shutdown();
+}
+
+#[test]
+fn request_budget_bounds_total_latency_across_retries() {
+    // every call sleeps 80ms then errors; with 3 retries allowed the
+    // old per-attempt accounting could burn 300ms+, but the 150ms
+    // request budget clamps attempt 2's deadline and stops the retry
+    // loop, so the client hears "budget exhausted" at ~150ms
+    let policy = ResiliencePolicy {
+        budget: Some(Duration::from_millis(150)),
+        retry: RetryPolicy { max_retries: 3, backoff: Duration::from_millis(20) },
+        fallback_enabled: false,
+        ..ResiliencePolicy::default()
+    };
+    let router = Arc::new(chaos_router(
+        ChaosConfig {
+            latency_rate: 1.0,
+            latency: Duration::from_millis(80),
+            error_rate: 1.0,
+            seed: 7,
+            ..ChaosConfig::default()
+        },
+        policy,
+        1500,
+        608,
+    ));
+    let handle = Server::new(Arc::clone(&router), 2).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+
+    let t0 = std::time::Instant::now();
+    match c.call(&Request::Knn { k: 5, x: 0.42, y: 0.58, engine: None }).unwrap() {
+        Response::Error { domain, message } => {
+            assert_eq!(domain, "timeout");
+            assert!(message.contains("budget"), "{message}");
+        }
+        other => panic!("expected budget timeout, got {other:?}"),
+    }
+    // budget (150ms) plus one attempt's grace, nowhere near the
+    // 4 × (80ms + backoff) an unbudgeted retry loop would take
+    assert!(t0.elapsed() < Duration::from_millis(400), "{:?}", t0.elapsed());
+
+    let s = stats(&mut c);
+    assert_eq!(stat(&s, "budget_exhausted"), 1, "{s}");
+    assert!(stat(&s, "timeouts") >= 1, "{s}");
+    assert!(stat(&s, "retries") >= 1, "{s}");
+    assert_eq!(stat(&s, "errors"), 1, "{s}");
+    handle.shutdown();
+}
+
+#[test]
+fn flapping_engine_stays_open_until_probe_success_window_passes() {
+    // deterministic flapping: chaos calls 0..4 fail, 4..8 succeed.
+    // threshold 2 trips the breaker inside the sick window; with
+    // probe_successes = 3 the breaker must survive two failed probes
+    // (re-trips) and then three consecutive healthy probes to close.
+    let policy = ResiliencePolicy {
+        breaker: BreakerPolicy {
+            threshold: 2,
+            cooldown: Duration::from_millis(60),
+            probe_successes: 3,
+        },
+        ..ResiliencePolicy::default()
+    };
+    let router = Arc::new(chaos_router(
+        ChaosConfig { flap_period: 4, seed: 8, ..ChaosConfig::default() },
+        policy,
+        1500,
+        609,
+    ));
+    let handle = Server::new(Arc::clone(&router), 2).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let truth = knn_ids(&mut c, 5, Some("brute"));
+    let health = |c: &mut Client| match c.call(&Request::Health).unwrap() {
+        Response::Text(t) => t,
+        other => panic!("{other:?}"),
+    };
+
+    // chaos calls 0 and 1 (sick): second failure trips the breaker
+    assert_eq!(knn_ids(&mut c, 5, None), truth);
+    assert_eq!(knn_ids(&mut c, 5, None), truth);
+    // open breaker: chaos skipped entirely, no call consumed
+    assert_eq!(knn_ids(&mut c, 5, None), truth);
+    assert!(health(&mut c).contains("chaos:open"));
+
+    // two probes land in the sick window (calls 2 and 3): each re-trips
+    for _ in 0..2 {
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(knn_ids(&mut c, 5, None), truth);
+        assert!(health(&mut c).contains("chaos:open"));
+    }
+    let s = stats(&mut c);
+    assert_eq!(stat(&s, "trips"), 3, "{s}");
+
+    // healthy window (calls 4..8): probes succeed, but the breaker must
+    // not close until three of them have passed
+    std::thread::sleep(Duration::from_millis(80));
+    assert_eq!(knn_ids(&mut c, 5, None), truth); // probe success 1 of 3
+    let h = health(&mut c);
+    assert!(h.contains("chaos:half-open"), "{h}");
+    assert_eq!(knn_ids(&mut c, 5, None), truth); // 2 of 3
+    let h = health(&mut c);
+    assert!(h.contains("chaos:half-open"), "{h}");
+    assert_eq!(knn_ids(&mut c, 5, None), truth); // 3 of 3: closed
+    let h = health(&mut c);
+    assert!(h.contains("chaos:closed"), "{h}");
+    assert!(h.contains("status=ok"), "{h}");
+
+    let s = stats(&mut c);
+    assert_eq!(stat(&s, "trips"), 3, "{s}");
+    assert_eq!(stat(&s, "errors"), 0, "{s}");
+    handle.shutdown();
+}
+
+#[test]
+fn shutdown_under_load_drains_in_flight_requests_and_reports_draining() {
+    // a 150ms-slow engine serves a request that is mid-flight when
+    // shutdown starts: the drain must let it finish, HEALTH must report
+    // status=draining meanwhile, and shutdown must return well within
+    // the drain deadline
+    let router = Arc::new(chaos_router(
+        ChaosConfig {
+            latency_rate: 1.0,
+            latency: Duration::from_millis(150),
+            seed: 9,
+            ..ChaosConfig::default()
+        },
+        ResiliencePolicy::default(),
+        1500,
+        610,
+    ));
+    let handle = Server::new(Arc::clone(&router), 4)
+        .with_drain_deadline(Duration::from_millis(1000))
+        .spawn("127.0.0.1:0")
+        .unwrap();
+    let addr = handle.addr;
+
+    // a probing connection established before the drain begins
+    let mut prober = Client::connect(&addr).unwrap();
+    assert_eq!(prober.call(&Request::Ping).unwrap(), Response::Text("pong".into()));
+
+    // fire the slow request; it has ~110ms left when shutdown starts
+    let slow = std::thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        c.call(&Request::Knn { k: 5, x: 0.42, y: 0.58, engine: None }).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(40));
+
+    let shutdown = std::thread::spawn(move || {
+        let t0 = std::time::Instant::now();
+        handle.shutdown();
+        t0.elapsed()
+    });
+    std::thread::sleep(Duration::from_millis(20));
+
+    // mid-drain: HEALTH on the pre-drain connection reports draining
+    match prober.call(&Request::Health).unwrap() {
+        Response::Text(t) => assert!(t.contains("status=draining"), "{t}"),
+        other => panic!("{other:?}"),
+    }
+
+    // the in-flight request completed normally during the drain
+    match slow.join().unwrap() {
+        Response::Neighbors(hits) => assert_eq!(hits.len(), 5),
+        other => panic!("{other:?}"),
+    }
+    // and the whole shutdown stayed far below the 1s drain deadline
+    // (it returns as soon as the last connection finishes)
+    let drained_in = shutdown.join().unwrap();
+    assert!(drained_in < Duration::from_millis(900), "{drained_in:?}");
 }
