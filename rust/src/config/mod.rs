@@ -188,6 +188,33 @@ pub struct ResilienceConfig {
     pub drain_deadline_ms: u64,
     /// Whether engine failures fall through the fallback chain.
     pub fallback: bool,
+    /// Socket read timeout in milliseconds; also the poll interval at
+    /// which idle connections observe shutdown, so keep it small.
+    pub read_timeout_ms: u64,
+    /// Socket write timeout in milliseconds; a client that stops
+    /// reading its responses is disconnected after this long.
+    pub write_timeout_ms: u64,
+    /// Disconnect a connection that has not completed a request line
+    /// for this long (slow-loris defense); 0 disables the deadline.
+    pub idle_timeout_ms: u64,
+    /// Maximum request line length in bytes; longer lines get a
+    /// structured `ERR too-long` and the connection closes.
+    pub max_line_bytes: usize,
+}
+
+/// `[store]` section — crash-safe snapshot persistence
+/// (see `crate::store`).
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Directory for snapshot generations; empty string disables
+    /// persistence entirely (no recovery pass, no periodic snapshots).
+    pub dir: String,
+    /// Period between background snapshots in milliseconds; 0 disables
+    /// the periodic snapshotter (recovery at boot still runs).
+    pub snapshot_interval_ms: u64,
+    /// Snapshot generations retained per prefix; older ones are pruned
+    /// after each successful save.
+    pub keep: usize,
 }
 
 /// Top-level config.
@@ -200,6 +227,7 @@ pub struct AsnnConfig {
     pub server: ServerConfig,
     pub runtime: RuntimeConfig,
     pub resilience: ResilienceConfig,
+    pub store: StoreConfig,
 }
 
 impl Default for AsnnConfig {
@@ -245,6 +273,15 @@ impl Default for AsnnConfig {
                 probe_successes: 1,
                 drain_deadline_ms: 500,
                 fallback: true,
+                read_timeout_ms: 100,
+                write_timeout_ms: 100,
+                idle_timeout_ms: 30_000,
+                max_line_bytes: 64 * 1024,
+            },
+            store: StoreConfig {
+                dir: "state".into(),
+                snapshot_interval_ms: 60_000,
+                keep: 3,
             },
         }
     }
@@ -344,6 +381,34 @@ impl AsnnConfig {
         ) as u64;
         cfg.resilience.fallback =
             doc.bool_or("resilience", "fallback", cfg.resilience.fallback);
+        cfg.resilience.read_timeout_ms = doc.int_or(
+            "resilience",
+            "read_timeout_ms",
+            cfg.resilience.read_timeout_ms as i64,
+        ) as u64;
+        cfg.resilience.write_timeout_ms = doc.int_or(
+            "resilience",
+            "write_timeout_ms",
+            cfg.resilience.write_timeout_ms as i64,
+        ) as u64;
+        cfg.resilience.idle_timeout_ms = doc.int_or(
+            "resilience",
+            "idle_timeout_ms",
+            cfg.resilience.idle_timeout_ms as i64,
+        ) as u64;
+        cfg.resilience.max_line_bytes = doc.int_or(
+            "resilience",
+            "max_line_bytes",
+            cfg.resilience.max_line_bytes as i64,
+        ) as usize;
+
+        cfg.store.dir = doc.str_or("store", "dir", &cfg.store.dir);
+        cfg.store.snapshot_interval_ms = doc.int_or(
+            "store",
+            "snapshot_interval_ms",
+            cfg.store.snapshot_interval_ms as i64,
+        ) as u64;
+        cfg.store.keep = doc.int_or("store", "keep", cfg.store.keep as i64) as usize;
 
         cfg.runtime.artifacts_dir =
             doc.str_or("runtime", "artifacts_dir", &cfg.runtime.artifacts_dir);
@@ -417,6 +482,19 @@ impl AsnnConfig {
                 "resilience.drain_deadline_ms must be > 0".into(),
             ));
         }
+        if self.resilience.read_timeout_ms == 0 || self.resilience.write_timeout_ms == 0 {
+            return Err(AsnnError::Config(
+                "resilience.read_timeout_ms/write_timeout_ms must be > 0".into(),
+            ));
+        }
+        if self.resilience.max_line_bytes < 64 {
+            return Err(AsnnError::Config(
+                "resilience.max_line_bytes must be >= 64".into(),
+            ));
+        }
+        if self.store.keep == 0 {
+            return Err(AsnnError::Config("store.keep must be >= 1".into()));
+        }
         Ok(())
     }
 }
@@ -474,6 +552,45 @@ mod tests {
         assert!(AsnnConfig::from_toml("[resilience]\nbreaker_cooldown_ms = 0").is_err());
         assert!(AsnnConfig::from_toml("[resilience]\nprobe_successes = 0").is_err());
         assert!(AsnnConfig::from_toml("[resilience]\ndrain_deadline_ms = 0").is_err());
+        assert!(AsnnConfig::from_toml("[resilience]\nread_timeout_ms = 0").is_err());
+        assert!(AsnnConfig::from_toml("[resilience]\nwrite_timeout_ms = 0").is_err());
+        assert!(AsnnConfig::from_toml("[resilience]\nmax_line_bytes = 10").is_err());
+        assert!(AsnnConfig::from_toml("[store]\nkeep = 0").is_err());
+    }
+
+    #[test]
+    fn wire_limit_and_store_defaults_and_overrides() {
+        let c = AsnnConfig::default();
+        assert_eq!(c.resilience.read_timeout_ms, 100);
+        assert_eq!(c.resilience.write_timeout_ms, 100);
+        assert_eq!(c.resilience.idle_timeout_ms, 30_000);
+        assert_eq!(c.resilience.max_line_bytes, 64 * 1024);
+        assert_eq!(c.store.dir, "state");
+        assert_eq!(c.store.snapshot_interval_ms, 60_000);
+        assert_eq!(c.store.keep, 3);
+        c.validate().unwrap();
+
+        let c = AsnnConfig::from_toml(
+            r#"
+            [resilience]
+            read_timeout_ms = 50
+            write_timeout_ms = 200
+            idle_timeout_ms = 0
+            max_line_bytes = 4096
+            [store]
+            dir = ""
+            snapshot_interval_ms = 0
+            keep = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.resilience.read_timeout_ms, 50);
+        assert_eq!(c.resilience.write_timeout_ms, 200);
+        assert_eq!(c.resilience.idle_timeout_ms, 0); // idle deadline off
+        assert_eq!(c.resilience.max_line_bytes, 4096);
+        assert_eq!(c.store.dir, ""); // persistence off
+        assert_eq!(c.store.snapshot_interval_ms, 0); // periodic off
+        assert_eq!(c.store.keep, 5);
     }
 
     #[test]

@@ -25,11 +25,22 @@ pub struct Metrics {
     pub hedges: AtomicU64,
     pub hedge_wins: AtomicU64,
     pub budget_exhausted: AtomicU64,
+    // hostile-input hardening counters
+    pub oversize_rejected: AtomicU64,
+    pub idle_disconnects: AtomicU64,
+    pub write_timeout_disconnects: AtomicU64,
+    // durability counters
+    pub corrupt_quarantined: AtomicU64,
+    pub snapshots: AtomicU64,
+    pub snapshot_failures: AtomicU64,
     /// Gauge: connections admitted and not yet finished.
     inflight: AtomicU64,
     /// Gauge: server is draining (shutdown in progress, in-flight
     /// connections finishing up).
     draining: AtomicBool,
+    /// Gauge: boot-time recovery in progress (state dir swept, warm
+    /// snapshot being restored); HEALTH reports `status=recovering`.
+    recovering: AtomicBool,
     knn_latency: Mutex<LatencyHistogram>,
     classify_latency: Mutex<LatencyHistogram>,
 }
@@ -52,6 +63,12 @@ pub struct MetricsSnapshot {
     pub hedges: u64,
     pub hedge_wins: u64,
     pub budget_exhausted: u64,
+    pub oversize_rejected: u64,
+    pub idle_disconnects: u64,
+    pub write_timeout_disconnects: u64,
+    pub corrupt_quarantined: u64,
+    pub snapshots: u64,
+    pub snapshot_failures: u64,
     pub knn_mean_us: f64,
     pub knn_p50_us: f64,
     pub knn_p99_us: f64,
@@ -134,6 +151,38 @@ impl Metrics {
         self.budget_exhausted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A request line exceeded `max_line_bytes` and was rejected with
+    /// `ERR too-long` before buffering the rest.
+    pub fn record_oversize_rejected(&self) {
+        self.oversize_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection sat idle past the idle deadline and was closed
+    /// (slow-loris defense).
+    pub fn record_idle_disconnect(&self) {
+        self.idle_disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A response write timed out and the connection was dropped.
+    pub fn record_write_timeout_disconnect(&self) {
+        self.write_timeout_disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Corrupt snapshot/state files quarantined to `<path>.corrupt`.
+    pub fn record_corrupt_quarantined(&self, n: u64) {
+        self.corrupt_quarantined.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A state snapshot generation was published.
+    pub fn record_snapshot(&self) {
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A state snapshot attempt failed (disk full, permissions, ...).
+    pub fn record_snapshot_failure(&self) {
+        self.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Flip the drain gauge (set at shutdown start so HEALTH can report
     /// `status=draining` while in-flight connections finish).
     pub fn set_draining(&self, draining: bool) {
@@ -142,6 +191,16 @@ impl Metrics {
 
     pub fn is_draining(&self) -> bool {
         self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Flip the recovery gauge (set while boot-time recovery runs so
+    /// HEALTH reports `status=recovering` until warm boot completes).
+    pub fn set_recovering(&self, recovering: bool) {
+        self.recovering.store(recovering, Ordering::SeqCst);
+    }
+
+    pub fn is_recovering(&self) -> bool {
+        self.recovering.load(Ordering::SeqCst)
     }
 
     pub fn enter_inflight(&self) {
@@ -176,6 +235,12 @@ impl Metrics {
             hedges: self.hedges.load(Ordering::Relaxed),
             hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
             budget_exhausted: self.budget_exhausted.load(Ordering::Relaxed),
+            oversize_rejected: self.oversize_rejected.load(Ordering::Relaxed),
+            idle_disconnects: self.idle_disconnects.load(Ordering::Relaxed),
+            write_timeout_disconnects: self.write_timeout_disconnects.load(Ordering::Relaxed),
+            corrupt_quarantined: self.corrupt_quarantined.load(Ordering::Relaxed),
+            snapshots: self.snapshots.load(Ordering::Relaxed),
+            snapshot_failures: self.snapshot_failures.load(Ordering::Relaxed),
             knn_mean_us: knn.mean_ns() / 1e3,
             knn_p50_us: knn.quantile_ns(0.5) as f64 / 1e3,
             knn_p99_us: knn.quantile_ns(0.99) as f64 / 1e3,
@@ -193,6 +258,8 @@ impl MetricsSnapshot {
              accept_errors={} shed={} timeouts={} retries={} trips={} \
              fallbacks={} panics={} hedges={} hedge_wins={} \
              budget_exhausted={} \
+             oversize_rejected={} idle_disconnects={} write_timeout_disconnects={} \
+             corrupt_quarantined={} snapshots={} snapshot_failures={} \
              knn_mean_us={:.1} knn_p50_us={:.1} knn_p99_us={:.1} \
              classify_mean_us={:.1} classify_p99_us={:.1}",
             self.knn_requests,
@@ -210,6 +277,12 @@ impl MetricsSnapshot {
             self.hedges,
             self.hedge_wins,
             self.budget_exhausted,
+            self.oversize_rejected,
+            self.idle_disconnects,
+            self.write_timeout_disconnects,
+            self.corrupt_quarantined,
+            self.snapshots,
+            self.snapshot_failures,
             self.knn_mean_us,
             self.knn_p50_us,
             self.knn_p99_us,
@@ -293,6 +366,46 @@ mod tests {
         ] {
             assert!(text.contains(field), "{text}");
         }
+    }
+
+    #[test]
+    fn hardening_and_durability_counters() {
+        let m = Metrics::new();
+        m.record_oversize_rejected();
+        m.record_idle_disconnect();
+        m.record_idle_disconnect();
+        m.record_write_timeout_disconnect();
+        m.record_corrupt_quarantined(3);
+        m.record_snapshot();
+        m.record_snapshot_failure();
+        let s = m.snapshot();
+        assert_eq!(s.oversize_rejected, 1);
+        assert_eq!(s.idle_disconnects, 2);
+        assert_eq!(s.write_timeout_disconnects, 1);
+        assert_eq!(s.corrupt_quarantined, 3);
+        assert_eq!(s.snapshots, 1);
+        assert_eq!(s.snapshot_failures, 1);
+        let text = s.render();
+        for field in [
+            "oversize_rejected=1",
+            "idle_disconnects=2",
+            "write_timeout_disconnects=1",
+            "corrupt_quarantined=3",
+            "snapshots=1",
+            "snapshot_failures=1",
+        ] {
+            assert!(text.contains(field), "{text}");
+        }
+    }
+
+    #[test]
+    fn recovering_gauge_flips() {
+        let m = Metrics::new();
+        assert!(!m.is_recovering());
+        m.set_recovering(true);
+        assert!(m.is_recovering());
+        m.set_recovering(false);
+        assert!(!m.is_recovering());
     }
 
     #[test]

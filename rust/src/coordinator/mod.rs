@@ -34,6 +34,12 @@
 //! `status=draining` via HEALTH, lets in-flight connections finish up
 //! to a drain deadline, then force-closes.
 //!
+//! Durability: the [`snapshotter`] keeps checksummed snapshots of the
+//! serving dataset and grid index in the `[store]` directory (see
+//! `crate::store`), so a crashed server warm-restarts from its last
+//! valid generation instead of regenerating and re-rasterizing.
+//! During the boot recovery pass HEALTH reports `status=recovering`.
+//!
 //! Everything is std-only (tokio is not in the offline vendor set):
 //! a thread-pool accept loop, `mpsc`-based batching, and atomic
 //! counters + a mutexed latency histogram for metrics. The
@@ -47,10 +53,12 @@ pub mod protocol;
 pub mod resilience;
 pub mod router;
 pub mod server;
+pub mod snapshotter;
 pub mod worker;
 
 pub use metrics::Metrics;
 pub use protocol::{Request, Response};
 pub use resilience::{Budget, CircuitBreaker, ResiliencePolicy};
 pub use router::Router;
-pub use server::Server;
+pub use server::{IoLimits, Server};
+pub use snapshotter::Snapshotter;

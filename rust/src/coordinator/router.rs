@@ -293,6 +293,10 @@ impl Router {
             .unwrap_or(true);
         let status = if self.metrics.is_draining() {
             "draining"
+        } else if self.metrics.is_recovering() {
+            // boot-time state recovery in progress: serving is possible
+            // but the warm snapshot is still being restored
+            "recovering"
         } else if default_open {
             "degraded"
         } else {
@@ -827,6 +831,28 @@ mod tests {
         r.metrics().set_draining(true);
         match r.handle(&Request::Health) {
             Response::Text(t) => assert!(t.contains("status=draining"), "{t}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn health_line_reports_recovering_then_ok() {
+        let r = router();
+        r.metrics().set_recovering(true);
+        match r.handle(&Request::Health) {
+            Response::Text(t) => assert!(t.contains("status=recovering"), "{t}"),
+            other => panic!("{other:?}"),
+        }
+        // draining outranks recovering
+        r.metrics().set_draining(true);
+        match r.handle(&Request::Health) {
+            Response::Text(t) => assert!(t.contains("status=draining"), "{t}"),
+            other => panic!("{other:?}"),
+        }
+        r.metrics().set_draining(false);
+        r.metrics().set_recovering(false);
+        match r.handle(&Request::Health) {
+            Response::Text(t) => assert!(t.contains("status=ok"), "{t}"),
             other => panic!("{other:?}"),
         }
     }

@@ -9,6 +9,17 @@
 //! job that cannot be queued on a shut-down pool is dropped with an
 //! error counter rather than panicking the accept loop.
 //!
+//! Hostile-input hardening ([`IoLimits`]): request lines are length-
+//! capped at `max_line_bytes` — an oversized line gets a structured
+//! `ERR too-long` and the connection closes, with at most one buffer's
+//! worth of the flood ever held in memory (counter:
+//! `oversize_rejected`). A per-connection idle deadline measures time
+//! to a *complete* line, so a slow-loris client dribbling bytes
+//! forever is disconnected just like a silent one (counter:
+//! `idle_disconnects`). Response writes are bounded by a write timeout;
+//! a client that stops reading is dropped (counter:
+//! `write_timeout_disconnects`).
+//!
 //! Shutdown is a two-phase drain: `ServerHandle::shutdown` first flips
 //! the draining flag (listener closes, HEALTH reports
 //! `status=draining`, connections finish their current request and
@@ -29,6 +40,35 @@ use super::router::Router;
 use super::worker::ThreadPool;
 use crate::error::{AsnnError, Result};
 
+/// Per-connection I/O limits (wire-level hostile-input defenses).
+#[derive(Debug, Clone, Copy)]
+pub struct IoLimits {
+    /// Socket read timeout. Doubles as the poll interval at which an
+    /// idle connection observes the stop/drain flags, so keep it small.
+    pub read_timeout: Duration,
+    /// Socket write timeout; a client that stops reading its responses
+    /// is disconnected after this long.
+    pub write_timeout: Duration,
+    /// Close a connection that has not delivered a *complete* request
+    /// line for this long (slow-loris defense). `Duration::ZERO`
+    /// disables the idle deadline.
+    pub idle_timeout: Duration,
+    /// Maximum request line length; longer lines are rejected with
+    /// `ERR too-long` and the connection closes.
+    pub max_line_bytes: usize,
+}
+
+impl Default for IoLimits {
+    fn default() -> Self {
+        Self {
+            read_timeout: Duration::from_millis(100),
+            write_timeout: Duration::from_millis(100),
+            idle_timeout: Duration::from_secs(30),
+            max_line_bytes: 64 * 1024,
+        }
+    }
+}
+
 /// The serving frontend.
 pub struct Server {
     router: Arc<Router>,
@@ -39,6 +79,8 @@ pub struct Server {
     /// How long shutdown waits for in-flight connections to finish
     /// before force-closing them.
     drain_deadline: Duration,
+    /// Per-connection wire limits.
+    limits: IoLimits,
 }
 
 /// Decrements the in-flight gauge when a connection finishes, even if
@@ -105,6 +147,7 @@ impl Server {
             workers: workers.max(1),
             max_inflight: 0,
             drain_deadline: Duration::from_millis(500),
+            limits: IoLimits::default(),
         }
     }
 
@@ -118,6 +161,12 @@ impl Server {
     /// force-closing them.
     pub fn with_drain_deadline(mut self, d: Duration) -> Self {
         self.drain_deadline = d;
+        self
+    }
+
+    /// Per-connection wire limits (timeouts, line cap).
+    pub fn with_io_limits(mut self, limits: IoLimits) -> Self {
+        self.limits = limits;
         self
     }
 
@@ -137,6 +186,7 @@ impl Server {
         let router = Arc::clone(&self.router);
         let workers = self.workers;
         let max_inflight = self.max_inflight;
+        let limits = self.limits;
         let join = std::thread::Builder::new()
             .name("asnn-accept".into())
             .spawn(move || {
@@ -157,7 +207,7 @@ impl Server {
                             if max_inflight > 0
                                 && metrics.inflight() >= max_inflight as u64
                             {
-                                shed(stream, &metrics);
+                                shed(stream, &metrics, limits.write_timeout);
                                 continue;
                             }
                             metrics.enter_inflight();
@@ -172,6 +222,7 @@ impl Server {
                                     &conn_router,
                                     &conn_stop,
                                     &conn_draining,
+                                    limits,
                                 );
                             });
                             if queued.is_err() {
@@ -211,68 +262,170 @@ impl Server {
 /// Reject a connection with a structured overload error so clients can
 /// distinguish "retry later" from a dead server. Bounded by a write
 /// timeout so a slow client cannot stall the accept loop.
-fn shed(stream: TcpStream, metrics: &Metrics) {
+fn shed(stream: TcpStream, metrics: &Metrics, write_timeout: Duration) {
     metrics.record_shed();
-    stream.set_write_timeout(Some(Duration::from_millis(100))).ok();
+    stream.set_write_timeout(Some(write_timeout)).ok();
     let mut writer = BufWriter::new(stream);
     let resp = Response::from_error(&AsnnError::Overloaded(
         "server at capacity; retry later".into(),
     ));
-    let _ = writeln!(writer, "{}", resp.format());
-    let _ = writer.flush();
+    let _ = write_line(&mut writer, metrics, &resp.format());
+}
+
+/// Outcome of one buffered read step of the bounded line reader.
+enum LineStep {
+    /// A complete line is ready in the accumulator.
+    Line,
+    /// Peer closed the connection with nothing buffered (a trailing
+    /// unterminated line is reported as `Line` first).
+    Eof,
+    /// The line exceeded `max_line_bytes` before its newline arrived.
+    TooLong,
+    /// Progress was made (or a buffer boundary hit) but no newline yet.
+    NeedMore,
+}
+
+/// One `fill_buf` round of reading a newline-terminated line into
+/// `acc` without ever holding more than `max_bytes` of it. Returning
+/// after every round (instead of looping internally) lets the caller
+/// run its idle-deadline and shutdown checks between rounds — a
+/// slow-loris client dribbling one byte per poll can't hide inside a
+/// blocking read loop. `WouldBlock`/`TimedOut` propagate as errors
+/// with `acc` preserved.
+fn line_step(
+    reader: &mut BufReader<TcpStream>,
+    acc: &mut Vec<u8>,
+    max_bytes: usize,
+) -> std::io::Result<LineStep> {
+    let (used, step) = {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            // EOF: a trailing unterminated line still gets processed
+            (0, if acc.is_empty() { LineStep::Eof } else { LineStep::Line })
+        } else if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            acc.extend_from_slice(&buf[..pos]);
+            (pos + 1, LineStep::Line)
+        } else {
+            let n = buf.len();
+            acc.extend_from_slice(buf);
+            (n, LineStep::NeedMore)
+        }
+    };
+    reader.consume(used);
+    if acc.len() > max_bytes {
+        return Ok(LineStep::TooLong);
+    }
+    Ok(step)
+}
+
+/// Write one response line, counting a timed-out write as a
+/// `write_timeout_disconnects` before propagating the error (the
+/// caller drops the connection).
+fn write_line(
+    writer: &mut BufWriter<TcpStream>,
+    metrics: &Metrics,
+    text: &str,
+) -> std::io::Result<()> {
+    let result = writeln!(writer, "{text}").and_then(|()| writer.flush());
+    if let Err(ref e) = result {
+        if e.kind() == std::io::ErrorKind::WouldBlock
+            || e.kind() == std::io::ErrorKind::TimedOut
+        {
+            metrics.record_write_timeout_disconnect();
+        }
+    }
+    result
 }
 
 /// Serve one connection until QUIT/EOF/server-stop. Reads use a short
 /// timeout so idle connections observe the stop and drain flags —
-/// otherwise a worker blocked in `read_line` would deadlock server
-/// shutdown while any client keeps its connection open. While draining,
-/// the current request is still answered, then the connection closes.
+/// otherwise a worker blocked reading would deadlock server shutdown
+/// while any client keeps its connection open. While draining, the
+/// current request is still answered, then the connection closes.
+///
+/// Wire hardening (see [`IoLimits`]): the idle clock measures time
+/// since the last *complete* request line, so both silent connections
+/// and byte-dribbling slow-loris clients hit the deadline; request
+/// lines longer than `max_line_bytes` are answered with `ERR
+/// too-long` and the connection closes.
 fn handle_connection(
     stream: TcpStream,
     router: &Router,
     stop: &AtomicBool,
     draining: &AtomicBool,
+    limits: IoLimits,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100))).ok();
+    stream.set_read_timeout(Some(limits.read_timeout)).ok();
+    stream.set_write_timeout(Some(limits.write_timeout)).ok();
+    let metrics = router.metrics();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    let mut line = String::new();
+    let mut acc: Vec<u8> = Vec::new();
+    let mut last_complete = Instant::now();
+    let idle_expired = |since: &Instant| {
+        limits.idle_timeout > Duration::ZERO && since.elapsed() >= limits.idle_timeout
+    };
     loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // EOF
-            Ok(_) => {}
+        match line_step(&mut reader, &mut acc, limits.max_line_bytes) {
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // keep any partial line already buffered; just poll the
-                // shutdown flags
+                // keep any partial line already buffered; poll the
+                // shutdown flags and the idle deadline
                 if stop.load(Ordering::SeqCst) || draining.load(Ordering::SeqCst) {
+                    break;
+                }
+                if idle_expired(&last_complete) {
+                    metrics.record_idle_disconnect();
                     break;
                 }
                 continue;
             }
             Err(e) => return Err(e),
+            Ok(LineStep::Eof) => break,
+            Ok(LineStep::TooLong) => {
+                metrics.record_oversize_rejected();
+                let resp = Response::Error {
+                    domain: "too-long".into(),
+                    message: format!(
+                        "request line exceeds {} bytes",
+                        limits.max_line_bytes
+                    ),
+                };
+                let _ = write_line(&mut writer, metrics, &resp.format());
+                break;
+            }
+            Ok(LineStep::NeedMore) => {
+                // bytes arrived but no complete line: the idle clock
+                // keeps running, so a dribbling client still expires
+                if idle_expired(&last_complete) {
+                    metrics.record_idle_disconnect();
+                    break;
+                }
+                continue;
+            }
+            Ok(LineStep::Line) => {}
         }
-        let msg = std::mem::take(&mut line);
+        let msg = String::from_utf8_lossy(&acc).into_owned();
+        acc.clear();
+        last_complete = Instant::now();
         if msg.trim().is_empty() {
             continue;
         }
         let response = match Request::parse(msg.trim_end()) {
             Ok(Request::Quit) => {
-                writeln!(writer, "{}", Response::Text("bye".into()).format())?;
-                writer.flush()?;
+                write_line(&mut writer, metrics, &Response::Text("bye".into()).format())?;
                 break;
             }
             Ok(req) => router.handle(&req),
             Err(e) => {
-                router.metrics().record_error();
+                metrics.record_error();
                 Response::from_error(&e)
             }
         };
-        writeln!(writer, "{}", response.format())?;
-        writer.flush()?;
+        write_line(&mut writer, metrics, &response.format())?;
         // graceful drain: this request was answered; close instead of
         // waiting for the next one
         if stop.load(Ordering::SeqCst) || draining.load(Ordering::SeqCst) {
@@ -473,6 +626,83 @@ mod tests {
                 "server still serving after shutdown"
             );
         }
+    }
+
+    fn spawn_limited(limits: IoLimits) -> (ServerHandle, Arc<Router>) {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(500, 113)));
+        let mut router = Router::new("brute", Arc::new(Metrics::new()));
+        router.register("brute", Arc::new(BruteEngine::new(ds)));
+        let router = Arc::new(router);
+        let handle = Server::new(Arc::clone(&router), 2)
+            .with_io_limits(limits)
+            .spawn("127.0.0.1:0")
+            .unwrap();
+        (handle, router)
+    }
+
+    #[test]
+    fn oversize_line_rejected_and_connection_closed() {
+        let (handle, router) = spawn_limited(IoLimits {
+            max_line_bytes: 64,
+            ..IoLimits::default()
+        });
+        let stream = TcpStream::connect(handle.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        // 200 bytes, no newline: the cap must trip without one
+        writer.write_all(&[b'A'; 200]).unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR too-long"), "{line}");
+        assert!(line.contains("64"), "{line}");
+        // server closed the connection after rejecting
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        assert_eq!(router.metrics().snapshot().oversize_rejected, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn idle_connection_disconnected_after_deadline() {
+        let (handle, router) = spawn_limited(IoLimits {
+            idle_timeout: Duration::from_millis(200),
+            ..IoLimits::default()
+        });
+        let stream = TcpStream::connect(handle.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(stream);
+        // send nothing; the server must hang up on its own
+        let t0 = Instant::now();
+        let mut line = String::new();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "expected EOF");
+        assert!(t0.elapsed() < Duration::from_secs(3), "{:?}", t0.elapsed());
+        assert_eq!(router.metrics().snapshot().idle_disconnects, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn slow_loris_dribble_is_disconnected() {
+        let (handle, router) = spawn_limited(IoLimits {
+            read_timeout: Duration::from_millis(50),
+            idle_timeout: Duration::from_millis(250),
+            ..IoLimits::default()
+        });
+        let stream = TcpStream::connect(handle.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        // dribble one byte at a time, never completing a line; the
+        // idle clock must not reset on partial progress
+        for _ in 0..12 {
+            let _ = writer.write_all(b"P");
+            let _ = writer.flush();
+            std::thread::sleep(Duration::from_millis(75));
+        }
+        let mut line = String::new();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "expected EOF");
+        assert_eq!(router.metrics().snapshot().idle_disconnects, 1);
+        handle.shutdown();
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Background snapshotter: keeps the serving state warm-restartable.
+//!
+//! The serving dataset and its rasterized grid index are immutable
+//! once the server is up, so the snapshotter's job is durability, not
+//! freshness: it publishes each payload into its [`SnapshotStore`]
+//! immediately at spawn (a fresh server becomes warm-restartable as
+//! soon as it is serving), then wakes up every `interval` and
+//! *repairs* — if a store no longer holds a valid generation (state
+//! dir wiped, files torn by an external fault), it re-publishes.
+//! Corrupt generations found while checking are quarantined by the
+//! store and counted via `corrupt_quarantined`.
+//!
+//! Successful saves tick the `snapshots` counter; failed saves tick
+//! `snapshot_failures` and are retried on the next interval — a full
+//! disk degrades durability, never serving.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::metrics::Metrics;
+use crate::error::{AsnnError, Result};
+use crate::store::SnapshotStore;
+
+/// Sleep slice so shutdown is observed promptly even with long
+/// snapshot intervals.
+const SLICE: Duration = Duration::from_millis(50);
+
+/// Handle for the background snapshot thread; stops and joins on drop.
+pub struct Snapshotter {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Snapshotter {
+    /// Spawn the snapshot thread. `sources` pairs each store with the
+    /// payload bytes it should durably hold. An `interval` of zero
+    /// means snapshot once at spawn and never again (no repair loop).
+    pub fn spawn(
+        sources: Vec<(SnapshotStore, Vec<u8>)>,
+        interval: Duration,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("asnn-snapshot".into())
+            .spawn(move || {
+                for (store, payload) in &sources {
+                    publish(store, payload, &metrics);
+                }
+                if interval.is_zero() {
+                    return;
+                }
+                let mut elapsed = Duration::ZERO;
+                while !stop2.load(Ordering::SeqCst) {
+                    std::thread::sleep(SLICE);
+                    elapsed += SLICE;
+                    if elapsed >= interval {
+                        elapsed = Duration::ZERO;
+                        for (store, payload) in &sources {
+                            repair(store, payload, &metrics);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| AsnnError::Coordinator(format!("spawn snapshotter: {e}")))?;
+        Ok(Self { stop, join: Some(join) })
+    }
+
+    /// Stop the thread and wait for it to exit.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        let Some(join) = self.join.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = join.join();
+    }
+}
+
+impl Drop for Snapshotter {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Unconditionally publish a new generation.
+fn publish(store: &SnapshotStore, payload: &[u8], metrics: &Metrics) {
+    match store.save(payload) {
+        Ok(_) => metrics.record_snapshot(),
+        Err(e) => {
+            metrics.record_snapshot_failure();
+            eprintln!(
+                "snapshotter: save failed prefix={} dir={} err={e}",
+                store.prefix(),
+                store.dir().display()
+            );
+        }
+    }
+}
+
+/// Re-publish only if the store no longer holds a valid generation.
+/// The validity check walks generations newest-first and quarantines
+/// corrupt ones as a side effect, which is exactly the repair we want.
+fn repair(store: &SnapshotStore, payload: &[u8], metrics: &Metrics) {
+    match store.load_latest() {
+        Ok(Some(snap)) => {
+            metrics.record_corrupt_quarantined(snap.quarantined.len() as u64);
+            // a valid generation survives; nothing to do
+        }
+        Ok(None) => publish(store, payload, metrics),
+        Err(e) => {
+            // the check itself failed (I/O error); try to re-publish
+            eprintln!(
+                "snapshotter: check failed prefix={} err={e}",
+                store.prefix()
+            );
+            publish(store, payload, metrics);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn store(name: &str) -> SnapshotStore {
+        let mut p = std::env::temp_dir();
+        p.push(format!("asnn-snapshotter-test-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        SnapshotStore::new(p, "s", 3)
+    }
+
+    #[test]
+    fn snapshots_immediately_at_spawn() {
+        let s = store("immediate");
+        let metrics = Arc::new(Metrics::new());
+        let snapper = Snapshotter::spawn(
+            vec![(s.clone(), b"payload".to_vec())],
+            Duration::ZERO, // no repair loop: deterministic count
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        // the first snapshot happens before the interval gate, so wait
+        // for it rather than for a full period
+        let mut ok = false;
+        for _ in 0..100 {
+            if metrics.snapshot().snapshots >= 1 {
+                ok = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(ok, "no snapshot after spawn");
+        snapper.shutdown();
+        let loaded = s.load_latest().unwrap().unwrap();
+        assert_eq!(loaded.payload, b"payload");
+        fs::remove_dir_all(s.dir()).ok();
+    }
+
+    #[test]
+    fn repair_republishes_after_state_dir_wipe() {
+        let s = store("repair");
+        let metrics = Arc::new(Metrics::new());
+        let snapper = Snapshotter::spawn(
+            vec![(s.clone(), b"durable".to_vec())],
+            Duration::from_millis(100),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        // wait for the initial snapshot, then wipe the state dir
+        for _ in 0..100 {
+            if metrics.snapshot().snapshots >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        fs::remove_dir_all(s.dir()).unwrap();
+        // the repair loop must notice and re-publish
+        let mut ok = false;
+        for _ in 0..100 {
+            if s.load_latest().ok().flatten().is_some() {
+                ok = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(ok, "snapshot not re-published after wipe");
+        assert!(metrics.snapshot().snapshots >= 2);
+        snapper.shutdown();
+        fs::remove_dir_all(s.dir()).ok();
+    }
+
+    #[test]
+    fn valid_generation_is_left_alone() {
+        let s = store("leave");
+        let metrics = Arc::new(Metrics::new());
+        let snapper = Snapshotter::spawn(
+            vec![(s.clone(), b"stable".to_vec())],
+            Duration::from_millis(60),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        // several repair periods pass; only the initial publish counts
+        std::thread::sleep(Duration::from_millis(400));
+        snapper.shutdown();
+        assert_eq!(metrics.snapshot().snapshots, 1);
+        assert_eq!(s.generations().unwrap().len(), 1);
+        fs::remove_dir_all(s.dir()).ok();
+    }
+}

@@ -77,6 +77,30 @@ impl ActiveEngine {
         Self::assemble(grid, None, params)
     }
 
+    /// Reattach a restored grid snapshot to its dataset (warm boot):
+    /// unlike [`from_grid`](Self::from_grid), `refined` mode and true
+    /// labels stay available. The pair is validated — a mismatched
+    /// grid/dataset generation is rejected rather than served.
+    pub fn restore(grid: MultiGrid, data: Arc<Dataset>, params: ActiveParams) -> Result<Self> {
+        if data.dim != 2 {
+            return Err(AsnnError::Grid(format!(
+                "restored dataset has dim {} (grid is 2-D)",
+                data.dim
+            )));
+        }
+        if grid.n_points() != data.len() || grid.num_classes() != data.num_classes {
+            return Err(AsnnError::Grid(format!(
+                "grid snapshot ({} points, {} classes) does not match dataset \
+                 ({} points, {} classes)",
+                grid.n_points(),
+                grid.num_classes(),
+                data.len(),
+                data.num_classes
+            )));
+        }
+        Ok(Self::assemble(grid, Some(data), params))
+    }
+
     fn assemble(grid: MultiGrid, data: Option<Arc<Dataset>>, params: ActiveParams) -> Self {
         let pyramid = if params.r0_policy == R0Policy::Density {
             Some(Pyramid::build(&grid))

@@ -47,6 +47,12 @@ pub enum AsnnError {
     #[error("timeout: {0}")]
     Timeout(String),
 
+    /// Durable-store failures: torn/corrupt snapshot files, checksum
+    /// mismatches, framing violations. Distinct from [`Io`](Self::Io)
+    /// so recovery code can tell "disk said no" from "file is garbage".
+    #[error("store error: {0}")]
+    Store(String),
+
     /// Underlying I/O failure.
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
@@ -68,6 +74,7 @@ impl AsnnError {
             AsnnError::Protocol(_) => "protocol",
             AsnnError::Overloaded(_) => "overload",
             AsnnError::Timeout(_) => "timeout",
+            AsnnError::Store(_) => "store",
             AsnnError::Io(_) => "io",
         }
     }
@@ -105,6 +112,7 @@ mod tests {
             AsnnError::Protocol(String::new()).tag(),
             AsnnError::Overloaded(String::new()).tag(),
             AsnnError::Timeout(String::new()).tag(),
+            AsnnError::Store(String::new()).tag(),
         ];
         let mut uniq = tags.to_vec();
         uniq.sort();

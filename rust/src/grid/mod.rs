@@ -14,6 +14,7 @@
 
 pub mod geometry;
 pub mod pyramid;
+pub mod snapshot;
 pub mod volume;
 
 pub use geometry::Geometry;
@@ -70,20 +71,69 @@ impl MultiGrid {
         let (mins, maxs) = ds.bounds();
         let geom = Geometry::new(resolution, [mins[0], mins[1]], [maxs[0], maxs[1]], padding)?;
 
-        let r = resolution;
-        let c = ds.num_classes;
-        let mut total = vec![0u16; r * r];
-        let mut class_counts = vec![0u16; r * r * c];
         let mut cell_points: Vec<(u32, u32)> = Vec::with_capacity(ds.len());
-
         for i in 0..ds.len() {
             let p = ds.point(i);
             let (px, py) = geom.pixel_of(p[0], p[1]);
-            let cell = geom.cell_index(px, py);
+            cell_points.push((geom.cell_index(px, py), i as u32));
+        }
+        Self::from_parts(geom, ds.num_classes, cell_points, ds.labels.clone())
+    }
+
+    /// Assemble a grid from its primary data: geometry, `(cell,
+    /// point_id)` assignments, and per-point labels. The derived state
+    /// (count images, row prefix sums, sort order) is recomputed, so
+    /// this is both the tail of [`build_padded`](Self::build_padded)
+    /// and the snapshot-restore path ([`snapshot::from_bytes`]) — a
+    /// restored grid is structurally identical to a rebuilt one.
+    /// Inputs are fully validated (snapshot bytes are untrusted).
+    pub(crate) fn from_parts(
+        geom: Geometry,
+        num_classes: usize,
+        mut cell_points: Vec<(u32, u32)>,
+        labels: Vec<u16>,
+    ) -> Result<Self> {
+        let r = geom.resolution();
+        let n = cell_points.len();
+        let cells = (r as u64) * (r as u64);
+        if num_classes == 0 || num_classes > u16::MAX as usize + 1 {
+            return Err(AsnnError::Grid(format!("invalid class count {num_classes}")));
+        }
+        if labels.len() != n {
+            return Err(AsnnError::Grid(format!(
+                "label count {} does not match point count {n}",
+                labels.len()
+            )));
+        }
+        let c = num_classes;
+        let mut total = vec![0u16; r * r];
+        let mut class_counts = vec![0u16; r * r * c];
+        let mut seen = vec![0u64; n / 64 + 1];
+        for (i, &(cell, pid)) in cell_points.iter().enumerate() {
+            if (cell as u64) >= cells {
+                return Err(AsnnError::Grid(format!(
+                    "cell {cell} out of range for resolution {r} (entry {i})"
+                )));
+            }
+            if pid as usize >= n {
+                return Err(AsnnError::Grid(format!(
+                    "point id {pid} out of range for {n} points (entry {i})"
+                )));
+            }
+            let (word, bit) = (pid as usize / 64, pid as usize % 64);
+            if seen[word] & (1 << bit) != 0 {
+                return Err(AsnnError::Grid(format!("duplicate point id {pid} (entry {i})")));
+            }
+            seen[word] |= 1 << bit;
+            let label = labels[pid as usize] as usize;
+            if label >= c {
+                return Err(AsnnError::Grid(format!(
+                    "label {label} out of range for {c} classes (point {pid})"
+                )));
+            }
             total[cell as usize] = total[cell as usize].saturating_add(1);
-            let ci = cell as usize * c + ds.label(i) as usize;
+            let ci = cell as usize * c + label;
             class_counts[ci] = class_counts[ci].saturating_add(1);
-            cell_points.push((cell, i as u32));
         }
         cell_points.sort_unstable();
 
@@ -104,9 +154,9 @@ impl MultiGrid {
             total,
             class_counts,
             cell_points,
-            labels: ds.labels.clone(),
+            labels,
             row_prefix,
-            n_points: ds.len(),
+            n_points: n,
         })
     }
 

@@ -1,0 +1,212 @@
+//! Serialization of [`MultiGrid`] for the coordinator's index
+//! snapshots.
+//!
+//! Only the grid's *primary* data goes to disk — geometry, `(cell,
+//! point_id)` assignments, labels. Derived state (count images, row
+//! prefix sums) is recomputed on restore through
+//! [`MultiGrid::from_parts`], which also fully validates the decoded
+//! values: snapshot bytes are untrusted input even after the outer
+//! CRC frame passes, since a version-skewed or hand-edited file can
+//! carry a valid checksum over nonsense.
+
+use super::{Geometry, MultiGrid};
+use crate::error::{AsnnError, Result};
+use crate::store::{self, ByteReader, ByteWriter};
+
+/// Frame magic for grid snapshots (bump on layout change).
+pub const GRID_MAGIC: &[u8; 8] = b"ASNNGRD1";
+
+/// Decode-time guard rails: a hostile header may not demand absurd
+/// allocations even when the arithmetic doesn't overflow.
+const MAX_RESOLUTION: usize = 1 << 15;
+const MAX_CLASSES: usize = 1 << 10;
+/// Cap on total `u16` elements across the rebuilt count images.
+const MAX_IMAGE_ELEMS: u64 = 1 << 31;
+
+/// Serialize a grid to its framed snapshot image.
+pub fn to_bytes(grid: &MultiGrid) -> Vec<u8> {
+    let geom = grid.geometry();
+    let (mins, maxs) = geom.bounds();
+    let n = grid.n_points();
+    let mut w = ByteWriter::with_capacity(64 + n * 10);
+    w.u64(geom.resolution() as u64);
+    w.f64(mins[0]);
+    w.f64(mins[1]);
+    w.f64(maxs[0]);
+    w.f64(maxs[1]);
+    w.u64(grid.num_classes() as u64);
+    w.u64(n as u64);
+    // child modules see the parent's private fields, so the snapshot
+    // reads the primary arrays directly without widening MultiGrid's API
+    for &(cell, pid) in &grid.cell_points {
+        w.u32(cell);
+        w.u32(pid);
+    }
+    for &label in &grid.labels {
+        w.u16(label);
+    }
+    store::encode_framed(GRID_MAGIC, &w.into_vec())
+}
+
+/// Rebuild a grid from a framed snapshot image. The restored grid is
+/// structurally identical to one built from the original dataset
+/// (same sort order, same recomputed count images).
+pub fn from_bytes(bytes: &[u8]) -> Result<MultiGrid> {
+    let payload = store::decode_framed(GRID_MAGIC, bytes)?;
+    let mut r = ByteReader::new(payload);
+    let resolution = r.u64()? as usize;
+    let mins = [r.f64()?, r.f64()?];
+    let maxs = [r.f64()?, r.f64()?];
+    let num_classes = r.u64()? as usize;
+    let n = r.u64()? as usize;
+
+    if !(8..=MAX_RESOLUTION).contains(&resolution) {
+        return Err(AsnnError::Store(format!(
+            "grid snapshot resolution {resolution} outside [8, {MAX_RESOLUTION}]"
+        )));
+    }
+    if num_classes == 0 || num_classes > MAX_CLASSES {
+        return Err(AsnnError::Store(format!(
+            "grid snapshot class count {num_classes} outside [1, {MAX_CLASSES}]"
+        )));
+    }
+    let elems = (resolution as u64)
+        .pow(2)
+        .checked_mul(1 + num_classes as u64)
+        .ok_or_else(|| AsnnError::Store("grid snapshot image size overflows".into()))?;
+    if elems > MAX_IMAGE_ELEMS {
+        return Err(AsnnError::Store(format!(
+            "grid snapshot would allocate {elems} image elements (cap {MAX_IMAGE_ELEMS})"
+        )));
+    }
+    // bounds are validated by Geometry::new (finite, ordered); the
+    // stored bounds are already padded, so no extra padding here —
+    // the rebuilt affine map is bit-identical to the original.
+    let geom = Geometry::new(resolution, mins, maxs, 0.0)?;
+
+    // n is implicitly bounded by the payload length: each point costs
+    // 10 bytes below, and ByteReader::take refuses short reads before
+    // any allocation proportional to n happens.
+    let mut cell_points = Vec::with_capacity(n.min(payload.len() / 10 + 1));
+    for chunk in r.take(n.checked_mul(8).ok_or_else(|| count_overflow(n))?)?.chunks_exact(8) {
+        let cell = u32::from_le_bytes(chunk[..4].try_into().unwrap());
+        let pid = u32::from_le_bytes(chunk[4..].try_into().unwrap());
+        cell_points.push((cell, pid));
+    }
+    let mut labels = Vec::with_capacity(n);
+    for chunk in r.take(n.checked_mul(2).ok_or_else(|| count_overflow(n))?)?.chunks_exact(2) {
+        labels.push(u16::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    r.finish()?;
+    MultiGrid::from_parts(geom, num_classes, cell_points, labels)
+}
+
+fn count_overflow(n: usize) -> AsnnError {
+    AsnnError::Store(format!("grid snapshot point count {n} overflows"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::engine::{brute::BruteEngine, NnEngine};
+
+    fn sample_grid(n: usize, res: usize) -> MultiGrid {
+        let ds = generate(&SyntheticSpec::paper_default(n, 17));
+        MultiGrid::build(&ds, res).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_is_structurally_identical() {
+        let ds = generate(&SyntheticSpec::paper_default(500, 17));
+        let grid = MultiGrid::build(&ds, 64).unwrap();
+        let back = from_bytes(&to_bytes(&grid)).unwrap();
+
+        assert_eq!(back.resolution(), grid.resolution());
+        assert_eq!(back.num_classes(), grid.num_classes());
+        assert_eq!(back.n_points(), grid.n_points());
+        assert_eq!(back.geometry(), grid.geometry());
+        assert_eq!(back.total_image(), grid.total_image());
+        for py in 0..64u32 {
+            for px in 0..64u32 {
+                assert_eq!(back.class_counts_at(px, py), grid.class_counts_at(px, py));
+                assert_eq!(
+                    back.points_at(px, py).collect::<Vec<_>>(),
+                    grid.points_at(px, py).collect::<Vec<_>>()
+                );
+            }
+        }
+        for pid in 0..grid.n_points() as u32 {
+            assert_eq!(back.label_of(pid), grid.label_of(pid));
+        }
+        // the affine map is bit-identical: every dataset point lands
+        // on the same pixel
+        for i in 0..ds.len() {
+            let p = ds.point(i);
+            assert_eq!(
+                back.geometry().pixel_of(p[0], p[1]),
+                grid.geometry().pixel_of(p[0], p[1])
+            );
+        }
+    }
+
+    #[test]
+    fn restored_grid_answers_queries() {
+        let ds = generate(&SyntheticSpec::paper_default(400, 5));
+        let grid = MultiGrid::build(&ds, 128).unwrap();
+        let restored = from_bytes(&to_bytes(&grid)).unwrap();
+        let active = crate::engine::active::ActiveEngine::from_grid(restored, Default::default());
+        let brute = BruteEngine::new(std::sync::Arc::new(ds));
+        let q = [0.4, 0.6];
+        let a = active.knn(&q, 5).unwrap();
+        let b = brute.knn(&q, 5).unwrap();
+        assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn truncation_at_every_byte_rejected() {
+        let grid = sample_grid(20, 16);
+        let bytes = to_bytes(&grid);
+        for cut in 0..bytes.len() {
+            assert!(
+                from_bytes(&bytes[..cut]).is_err(),
+                "truncated grid snapshot ({cut}/{} bytes) accepted",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_headers_rejected() {
+        // valid frame, nonsense body: resolution beyond the cap
+        let mut w = ByteWriter::with_capacity(64);
+        w.u64(1 << 40);
+        for v in [0.0, 0.0, 1.0, 1.0] {
+            w.f64(v);
+        }
+        w.u64(3);
+        w.u64(0);
+        let framed = store::encode_framed(GRID_MAGIC, &w.into_vec());
+        let err = from_bytes(&framed).unwrap_err().to_string();
+        assert!(err.contains("resolution"), "{err}");
+
+        // class count that would demand terabytes of count images
+        let mut w = ByteWriter::with_capacity(64);
+        w.u64(1 << 15);
+        for v in [0.0, 0.0, 1.0, 1.0] {
+            w.f64(v);
+        }
+        w.u64(1024);
+        w.u64(0);
+        let framed = store::encode_framed(GRID_MAGIC, &w.into_vec());
+        let err = from_bytes(&framed).unwrap_err().to_string();
+        assert!(err.contains("image elements"), "{err}");
+    }
+
+    #[test]
+    fn wrong_payload_type_rejected() {
+        // a dataset snapshot is not a grid snapshot
+        let framed = store::encode_framed(b"ASNNDS02", b"whatever");
+        assert!(from_bytes(&framed).is_err());
+    }
+}

@@ -33,6 +33,7 @@ pub mod error;
 pub mod grid;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod store;
 pub mod util;
 pub mod viz;
 

@@ -14,7 +14,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use asnn::config::{AsnnConfig, EngineKind, Metric, R0Policy, SearchMode};
-use asnn::coordinator::{Metrics, ResiliencePolicy, Router, Server};
+use asnn::coordinator::{IoLimits, Metrics, ResiliencePolicy, Router, Server, Snapshotter};
 use asnn::data::synthetic::{generate, generate_queries, Family, SyntheticSpec};
 use asnn::data::{io as dio, Dataset};
 use asnn::engine::active::{ActiveEngine, ActiveParams};
@@ -25,7 +25,8 @@ use asnn::engine::kdtree::KdTreeEngine;
 use asnn::engine::lsh::{LshEngine, LshParams};
 use asnn::engine::NnEngine;
 use asnn::error::{AsnnError, Result};
-use asnn::grid::MultiGrid;
+use asnn::grid::{snapshot as grid_snapshot, MultiGrid};
+use asnn::store::{self, SnapshotStore};
 #[cfg(feature = "pjrt")]
 use asnn::runtime::RuntimeService;
 use asnn::util::cli::Args;
@@ -263,20 +264,120 @@ fn cmd_classify(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Warm-boot the dataset from the newest valid snapshot generation,
+/// falling back to `None` (cold boot) when the store is empty or the
+/// payload does not decode.
+fn recover_dataset(store: &SnapshotStore, metrics: &Metrics) -> Option<Arc<Dataset>> {
+    let snap = match store.load_latest() {
+        Ok(Some(snap)) => snap,
+        Ok(None) => return None,
+        Err(e) => {
+            eprintln!("store: dataset recovery failed: {e}");
+            return None;
+        }
+    };
+    metrics.record_corrupt_quarantined(snap.quarantined.len() as u64);
+    match dio::dataset_from_bytes(&snap.payload) {
+        Ok(ds) => {
+            println!("warm boot: dataset from snapshot generation {}", snap.seq);
+            Some(Arc::new(ds))
+        }
+        Err(e) => {
+            eprintln!("store: dataset snapshot unusable, regenerating: {e}");
+            None
+        }
+    }
+}
+
+/// Warm-boot the active engine from a grid snapshot; any mismatch with
+/// the dataset or configured resolution falls back to a fresh build.
+fn recover_active_engine(
+    store: &SnapshotStore,
+    ds: &Arc<Dataset>,
+    cfg: &AsnnConfig,
+    metrics: &Metrics,
+) -> Option<ActiveEngine> {
+    let snap = match store.load_latest() {
+        Ok(Some(snap)) => snap,
+        _ => return None,
+    };
+    metrics.record_corrupt_quarantined(snap.quarantined.len() as u64);
+    let restored = grid_snapshot::from_bytes(&snap.payload).and_then(|grid| {
+        if grid.resolution() != cfg.grid.resolution {
+            return Err(AsnnError::Grid(format!(
+                "snapshot resolution {} != configured {}",
+                grid.resolution(),
+                cfg.grid.resolution
+            )));
+        }
+        ActiveEngine::restore(grid, Arc::clone(ds), active_params(cfg))
+    });
+    match restored {
+        Ok(engine) => {
+            println!("warm boot: grid index from snapshot generation {}", snap.seq);
+            Some(engine)
+        }
+        Err(e) => {
+            eprintln!("store: grid snapshot unusable, rebuilding: {e}");
+            None
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let ds = load_dataset(args, &cfg)?;
     let metrics = Arc::new(Metrics::new());
+
+    // boot-time recovery pass over the state dir: quarantine torn
+    // files, then warm-boot dataset and grid from the newest valid
+    // snapshot generations (HEALTH reports status=recovering until
+    // the listener is up)
+    let store_dir =
+        (!cfg.store.dir.is_empty()).then(|| Path::new(&cfg.store.dir).to_path_buf());
+    let stores = store_dir.as_ref().map(|dir| {
+        (
+            SnapshotStore::new(dir.clone(), "dataset", cfg.store.keep),
+            SnapshotStore::new(dir.clone(), "grid", cfg.store.keep),
+        )
+    });
+    let mut recovered_ds = None;
+    if let (Some(dir), Some((ds_store, _))) = (&store_dir, &stores) {
+        metrics.set_recovering(true);
+        let report = store::recover(dir)?;
+        metrics.record_corrupt_quarantined(report.quarantined.len() as u64);
+        if report.scanned > 0 {
+            println!("store recovery: {}", report.summary());
+        }
+        // an explicit --data file outranks any snapshot
+        if args.get("data").is_none() {
+            recovered_ds = recover_dataset(ds_store, &metrics);
+        }
+    }
+    let ds = match recovered_ds {
+        Some(ds) => ds,
+        None => load_dataset(args, &cfg)?,
+    };
+    let active = {
+        let restored = stores
+            .as_ref()
+            .and_then(|(_, gs)| recover_active_engine(gs, &ds, &cfg, &metrics));
+        match restored {
+            Some(engine) => Arc::new(engine),
+            None => Arc::new(ActiveEngine::new(
+                ds.clone(),
+                cfg.grid.resolution,
+                active_params(&cfg),
+            )?),
+        }
+    };
+
     let policy = ResiliencePolicy::from_config(&cfg.resilience);
-    let mut router = Router::with_policy(cfg.engine.name(), metrics, policy);
+    let mut router = Router::with_policy(cfg.engine.name(), Arc::clone(&metrics), policy);
     // always register the cheap engines; PJRT only when artifacts exist
     router.register("brute", Arc::new(BruteEngine::new(ds.clone())));
     router.register("kdtree", Arc::new(KdTreeEngine::build(ds.clone())));
     router.register("lsh", Arc::new(LshEngine::build(ds.clone(), LshParams::default())));
-    router.register(
-        "active",
-        Arc::new(ActiveEngine::new(ds.clone(), cfg.grid.resolution, active_params(&cfg))?),
-    );
+    router.register("active", Arc::clone(&active) as Arc<dyn NnEngine>);
     let artifacts = Path::new(&cfg.runtime.artifacts_dir);
     #[cfg(feature = "pjrt")]
     if artifacts.join("manifest.toml").exists() {
@@ -284,7 +385,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         router.register(
             "active-pjrt",
             Arc::new(ActivePjrtEngine::new(
-                ds,
+                ds.clone(),
                 cfg.grid.resolution,
                 active_params(&cfg),
                 service,
@@ -303,16 +404,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .with_max_inflight(cfg.resilience.max_inflight)
         .with_drain_deadline(std::time::Duration::from_millis(
             cfg.resilience.drain_deadline_ms,
-        ));
+        ))
+        .with_io_limits(IoLimits {
+            read_timeout: std::time::Duration::from_millis(cfg.resilience.read_timeout_ms),
+            write_timeout: std::time::Duration::from_millis(cfg.resilience.write_timeout_ms),
+            idle_timeout: std::time::Duration::from_millis(cfg.resilience.idle_timeout_ms),
+            max_line_bytes: cfg.resilience.max_line_bytes,
+        });
     let handle = server.spawn(&cfg.server.addr)?;
+    metrics.set_recovering(false);
+
+    // keep the serving state warm-restartable: publish dataset + grid
+    // snapshots now, then repair them every snapshot_interval_ms
+    let _snapshotter = match &stores {
+        Some((ds_store, grid_store)) => Some(Snapshotter::spawn(
+            vec![
+                (ds_store.clone(), dio::dataset_to_bytes(&ds)),
+                (grid_store.clone(), grid_snapshot::to_bytes(active.grid())),
+            ],
+            std::time::Duration::from_millis(cfg.store.snapshot_interval_ms),
+            Arc::clone(&metrics),
+        )?),
+        None => None,
+    };
+
     println!(
         "serving on {} (engines ready; deadline={}ms budget={}ms hedge={}ms \
-         max_inflight={}; Ctrl-C to stop)",
+         max_inflight={} store={}; Ctrl-C to stop)",
         handle.addr,
         cfg.resilience.deadline_ms,
         cfg.resilience.budget_ms,
         cfg.resilience.hedge_delay_ms,
-        cfg.resilience.max_inflight
+        cfg.resilience.max_inflight,
+        store_dir
+            .as_ref()
+            .map(|d| d.display().to_string())
+            .unwrap_or_else(|| "disabled".into())
     );
     // block forever (no signal handling crates offline; Ctrl-C kills us)
     loop {

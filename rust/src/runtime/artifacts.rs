@@ -152,9 +152,13 @@ pub struct ArtifactRegistry {
 }
 
 impl ArtifactRegistry {
-    /// Compile every manifest entry (one-time cost at startup).
+    /// Compile every manifest entry (one-time cost at startup). The
+    /// manifest's files are integrity-checked first so a torn `make
+    /// artifacts` (missing or zero-byte HLO file) fails here with the
+    /// offending entry named, not deep inside the XLA compiler.
     pub fn load(rt: &PjrtRuntime, dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
+        manifest.check_files()?;
         let mut map = HashMap::new();
         for meta in manifest.iter() {
             let path = manifest.path_of(meta);

@@ -61,6 +61,22 @@ impl Manifest {
 
     /// Parse manifest text (separated out for tests).
     pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        // The TOML-subset parser merges duplicate [section] headers
+        // silently, which for a manifest means one artifact's shape
+        // metadata clobbers another's. Detect duplicates on the raw
+        // text before parsing.
+        let mut seen = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                if !seen.insert(name.trim().to_string()) {
+                    return Err(AsnnError::Runtime(format!(
+                        "duplicate manifest entry {:?}",
+                        name.trim()
+                    )));
+                }
+            }
+        }
         let doc = Document::parse(text)?;
         let mut entries = BTreeMap::new();
         for name in doc.sections() {
@@ -74,6 +90,7 @@ impl Manifest {
                     "manifest entry {name:?} missing kind/file"
                 )));
             }
+            validate_file_path(name, &file)?;
             entries.insert(
                 name.to_string(),
                 ArtifactMeta {
@@ -119,6 +136,53 @@ impl Manifest {
     pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
         self.dir.join(&meta.file)
     }
+
+    /// Verify every referenced HLO file exists and is non-empty. A
+    /// zero-byte artifact is the residue of an interrupted `make
+    /// artifacts`; compiling it would fail confusingly much later.
+    pub fn check_files(&self) -> Result<()> {
+        for meta in self.entries.values() {
+            let path = self.path_of(meta);
+            let md = std::fs::metadata(&path).map_err(|e| {
+                AsnnError::Runtime(format!(
+                    "artifact {:?}: cannot stat {}: {e}",
+                    meta.name,
+                    path.display()
+                ))
+            })?;
+            if md.len() == 0 {
+                return Err(AsnnError::Runtime(format!(
+                    "artifact {:?}: {} is zero bytes (torn write?)",
+                    meta.name,
+                    path.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Reject `file` values that resolve outside the manifest directory —
+/// a manifest is data, not a license to read anywhere on disk.
+fn validate_file_path(name: &str, file: &str) -> Result<()> {
+    use std::path::Component;
+    let p = Path::new(file);
+    for comp in p.components() {
+        match comp {
+            Component::ParentDir => {
+                return Err(AsnnError::Runtime(format!(
+                    "manifest entry {name:?}: file {file:?} escapes the manifest dir"
+                )));
+            }
+            Component::RootDir | Component::Prefix(_) => {
+                return Err(AsnnError::Runtime(format!(
+                    "manifest entry {name:?}: file {file:?} must be relative"
+                )));
+            }
+            _ => {}
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -185,5 +249,58 @@ mod tests {
     fn top_level_keys_ignored() {
         let m = Manifest::parse(Path::new("/tmp"), "version = 2").unwrap();
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn duplicate_entries_rejected() {
+        let bad = r#"
+            [a]
+            kind = "disk_count"
+            file = "a.hlo.txt"
+            [a]
+            kind = "disk_count"
+            file = "other.hlo.txt"
+        "#;
+        let err = Manifest::parse(Path::new("/tmp"), bad).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn escaping_paths_rejected() {
+        for file in ["../../../etc/passwd", "ok/../../up", "/etc/passwd"] {
+            let text = format!("[a]\nkind = \"disk_count\"\nfile = \"{file}\"\n");
+            let err = Manifest::parse(Path::new("/tmp"), &text).unwrap_err().to_string();
+            assert!(
+                err.contains("escapes") || err.contains("relative"),
+                "{file}: {err}"
+            );
+        }
+        // plain subdirectory paths stay allowed
+        let ok = "[a]\nkind = \"disk_count\"\nfile = \"sub/a.hlo.txt\"\n";
+        assert!(Manifest::parse(Path::new("/tmp"), ok).is_ok());
+    }
+
+    #[test]
+    fn check_files_rejects_missing_and_zero_byte() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("asnn-manifest-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = "[a]\nkind = \"disk_count\"\nfile = \"a.hlo.txt\"\n";
+        let m = Manifest::parse(&dir, text).unwrap();
+
+        // missing
+        let err = m.check_files().unwrap_err().to_string();
+        assert!(err.contains("cannot stat"), "{err}");
+
+        // zero-byte (torn write)
+        std::fs::write(dir.join("a.hlo.txt"), b"").unwrap();
+        let err = m.check_files().unwrap_err().to_string();
+        assert!(err.contains("zero bytes"), "{err}");
+
+        // real content passes
+        std::fs::write(dir.join("a.hlo.txt"), b"HloModule m").unwrap();
+        m.check_files().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,152 @@
+//! Bounds-checked little-endian cursors for snapshot payloads.
+//!
+//! Snapshot bodies are parsed from untrusted bytes (a torn or tampered
+//! file may carry a valid checksum yet nonsense lengths after a version
+//! skew), so every read is bounds-checked and returns a structured
+//! [`AsnnError::Store`] instead of panicking or slicing out of range.
+
+use crate::error::{AsnnError, Result};
+
+/// Read cursor over a byte slice; all integers are little-endian.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn short(&self, want: usize) -> AsnnError {
+        AsnnError::Store(format!(
+            "payload truncated: need {want} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        ))
+    }
+
+    /// Take `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(self.short(n));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Assert the payload is fully consumed (trailing garbage is as
+    /// suspicious as a short read).
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(AsnnError::Store(format!(
+                "payload has {} trailing bytes after offset {}",
+                self.remaining(),
+                self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Append-only little-endian writer (a thin `Vec<u8>` wrapper that
+/// mirrors [`ByteReader`] so encode/decode read symmetrically).
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = ByteWriter::with_capacity(64);
+        w.u16(0xBEEF);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 7);
+        w.f64(-0.125);
+        w.bytes(b"xyz");
+        let v = w.into_vec();
+
+        let mut r = ByteReader::new(&v);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 7);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.take(3).unwrap(), b"xyz");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn short_read_is_error_not_panic() {
+        let mut r = ByteReader::new(&[1, 2, 3]);
+        assert!(r.u64().is_err());
+        // a failed read consumes nothing
+        assert_eq!(r.remaining(), 3);
+        assert_eq!(r.u16().unwrap(), 0x0201);
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut r = ByteReader::new(&[0, 0, 9]);
+        r.u16().unwrap();
+        assert!(r.finish().is_err());
+    }
+}

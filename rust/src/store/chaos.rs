@@ -1,0 +1,138 @@
+//! Crash injection for the durability layer — the disk-side sibling of
+//! [`ChaosEngine`](crate::engine::chaos::ChaosEngine).
+//!
+//! A [`ChaosWriter`] simulates a process dying mid-write: bytes up to
+//! a crash offset reach the underlying file, everything after is
+//! silently discarded, and the caller is told the write succeeded —
+//! exactly the lie a killed process's page cache tells. The crash
+//! offset is either explicit (so tests can sweep *every* byte
+//! boundary) or drawn from the seeded deterministic [`Rng`].
+
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::Path;
+
+use crate::util::rng::Rng;
+
+/// `Write` impl that stops persisting after `crash_at` bytes.
+pub struct ChaosWriter {
+    file: File,
+    crash_at: u64,
+    /// Bytes the caller believes it wrote.
+    claimed: u64,
+    /// Bytes that actually reached the file.
+    persisted: u64,
+}
+
+impl ChaosWriter {
+    /// Writer that persists exactly the first `crash_at` bytes of
+    /// whatever is written through it.
+    pub fn crash_after(path: &Path, crash_at: u64) -> io::Result<Self> {
+        Ok(Self { file: File::create(path)?, crash_at, claimed: 0, persisted: 0 })
+    }
+
+    /// Writer whose crash offset is drawn uniformly from
+    /// `[0, max_len]` using the seeded generator; returns the chosen
+    /// offset so the test can assert against it.
+    pub fn crash_randomly(path: &Path, max_len: u64, seed: u64) -> io::Result<(Self, u64)> {
+        let mut rng = Rng::new(seed);
+        let crash_at = rng.below(max_len + 1);
+        Ok((Self::crash_after(path, crash_at)?, crash_at))
+    }
+
+    /// Bytes the caller was told were written.
+    pub fn claimed(&self) -> u64 {
+        self.claimed
+    }
+
+    /// Bytes that actually hit the file.
+    pub fn persisted(&self) -> u64 {
+        self.persisted
+    }
+
+    /// Whether the simulated crash point was reached.
+    pub fn crashed(&self) -> bool {
+        self.claimed > self.persisted || self.claimed >= self.crash_at
+    }
+
+    /// One-shot helper: write `bytes` to `path` through a crash at
+    /// `crash_at`, syncing what survived. Returns bytes persisted.
+    pub fn torn_write(path: &Path, bytes: &[u8], crash_at: u64) -> io::Result<u64> {
+        let mut w = Self::crash_after(path, crash_at)?;
+        w.write_all(bytes)?;
+        w.flush()?;
+        w.file.sync_all()?;
+        Ok(w.persisted())
+    }
+}
+
+impl Write for ChaosWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let room = self.crash_at.saturating_sub(self.persisted);
+        let survive = (buf.len() as u64).min(room) as usize;
+        if survive > 0 {
+            self.file.write_all(&buf[..survive])?;
+            self.persisted += survive as u64;
+        }
+        self.claimed += buf.len() as u64;
+        // Report full success: the dying process never learns its
+        // tail was lost.
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.file.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("asnn-chaoswriter-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn truncates_at_exact_offset() {
+        let path = tmp("exact");
+        for cut in [0u64, 1, 7, 16, 31, 32] {
+            let persisted = ChaosWriter::torn_write(&path, &[0xAA; 32], cut).unwrap();
+            assert_eq!(persisted, cut.min(32));
+            assert_eq!(fs::metadata(&path).unwrap().len(), cut.min(32));
+        }
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn caller_is_lied_to() {
+        let path = tmp("lie");
+        let mut w = ChaosWriter::crash_after(&path, 4).unwrap();
+        // chunked writes straddling the crash point all "succeed"
+        w.write_all(&[1, 2, 3]).unwrap();
+        w.write_all(&[4, 5, 6]).unwrap();
+        w.write_all(&[7]).unwrap();
+        assert_eq!(w.claimed(), 7);
+        assert_eq!(w.persisted(), 4);
+        assert!(w.crashed());
+        drop(w);
+        assert_eq!(fs::read(&path).unwrap(), vec![1, 2, 3, 4]);
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn random_offsets_are_deterministic_and_in_range() {
+        let path = tmp("random");
+        for seed in 0..50u64 {
+            let (_, a) = ChaosWriter::crash_randomly(&path, 100, seed).unwrap();
+            let (_, b) = ChaosWriter::crash_randomly(&path, 100, seed).unwrap();
+            assert_eq!(a, b, "seed {seed} not deterministic");
+            assert!(a <= 100);
+        }
+        fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,73 @@
+//! CRC32 (IEEE 802.3, reflected, polynomial `0xEDB88320`).
+//!
+//! Hand-rolled table-based implementation — the crate is std-only, and
+//! a 256-entry table is plenty for snapshot-sized payloads. The exact
+//! variant matters only for self-consistency (we never interoperate
+//! with external CRC tooling), but IEEE is chosen so `crc32("123456789")
+//! == 0xCBF43926`, the standard check value, stays verifiable.
+
+/// 256-entry lookup table, one XOR+shift step per input byte.
+const TABLE: [u32; 256] = make_table();
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 of `bytes` in one shot.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_check_value() {
+        // The canonical CRC32 test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_crc() {
+        let a = b"the quick brown fox".to_vec();
+        let base = crc32(&a);
+        for i in 0..a.len() {
+            for bit in 0..8 {
+                let mut b = a.clone();
+                b[i] ^= 1 << bit;
+                assert_ne!(crc32(&b), base, "flip at byte {i} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_changes_crc() {
+        let a = vec![0xABu8; 64];
+        let base = crc32(&a);
+        for cut in 0..a.len() {
+            assert_ne!(crc32(&a[..cut]), base, "truncation at {cut} undetected");
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Crash-safe durable storage: atomic writes, checksummed framing, and
+//! startup recovery.
+//!
+//! Every on-disk artifact the coordinator may reload after a restart
+//! goes through this module so that a crash at *any* byte of a write
+//! can never be mistaken for valid state:
+//!
+//! - [`atomic_write`] publishes a file all-or-nothing: write
+//!   `<path>.tmp`, fsync, rename over `<path>`, fsync the directory.
+//!   Readers see either the old complete file or the new complete file.
+//! - [`encode_framed`]/[`decode_framed`] wrap a payload in a versioned
+//!   8-byte magic header and a 16-byte footer (declared length + CRC32
+//!   + footer magic) so torn, truncated, or bit-rotted files fail
+//!   validation at every possible truncation point.
+//! - [`recover`] sweeps a state directory on boot: orphaned `.tmp`
+//!   files (writes that never committed) are deleted, corrupt `.snap`
+//!   files are quarantined to `<path>.corrupt` with a structured log
+//!   line, and the caller falls back to the newest valid generation
+//!   via [`SnapshotStore::load_latest`].
+//!
+//! The crash-injection harness ([`ChaosWriter`]) simulates a process
+//! dying mid-write at an arbitrary byte offset; `tests/crash_recovery.rs`
+//! drives it through every truncation point of a snapshot and proves
+//! the server still boots and serves from the previous generation.
+
+pub mod bytes;
+pub mod chaos;
+pub mod checksum;
+pub mod snapshot;
+
+pub use bytes::{ByteReader, ByteWriter};
+pub use chaos::ChaosWriter;
+pub use checksum::crc32;
+pub use snapshot::{LoadedSnapshot, SnapshotStore, SNAP_MAGIC};
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{AsnnError, Result};
+
+/// Trailer sentinel: the last four bytes of every framed file. A torn
+/// write that loses the tail loses this first.
+pub const FOOTER_MAGIC: &[u8; 4] = b"ASFT";
+
+/// Bytes added around a payload by framing: 8 (header magic) + 8
+/// (declared payload length) + 4 (CRC32) + 4 (footer magic).
+pub const FRAME_OVERHEAD: usize = 24;
+
+/// Frame `payload` for disk: `magic ‖ payload ‖ len:u64 ‖ crc:u32 ‖
+/// FOOTER_MAGIC`. The CRC covers everything before it (header magic,
+/// payload, and declared length), so no prefix of a frame is a valid
+/// frame and no header/length corruption goes unnoticed.
+pub fn encode_framed(magic: &[u8; 8], payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(payload.len() + FRAME_OVERHEAD);
+    buf.extend_from_slice(magic);
+    buf.extend_from_slice(payload);
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf.extend_from_slice(FOOTER_MAGIC);
+    buf
+}
+
+/// Validate a frame produced by [`encode_framed`] and return the
+/// payload slice. Every check failure names what was violated so the
+/// quarantine log line says *why* a file was rejected.
+pub fn decode_framed<'a>(magic: &[u8; 8], bytes: &'a [u8]) -> Result<&'a [u8]> {
+    let n = bytes.len();
+    if n < FRAME_OVERHEAD {
+        return Err(AsnnError::Store(format!(
+            "file truncated: {n} bytes, a frame needs at least {FRAME_OVERHEAD}"
+        )));
+    }
+    if &bytes[..8] != magic {
+        return Err(AsnnError::Store(format!(
+            "bad header magic (expected {:?})",
+            String::from_utf8_lossy(magic)
+        )));
+    }
+    if &bytes[n - 4..] != FOOTER_MAGIC {
+        return Err(AsnnError::Store("missing footer magic (torn write?)".into()));
+    }
+    let declared = u64::from_le_bytes(bytes[n - 16..n - 8].try_into().unwrap());
+    let actual = (n - FRAME_OVERHEAD) as u64;
+    if declared != actual {
+        return Err(AsnnError::Store(format!(
+            "length mismatch: footer declares {declared} payload bytes, file carries {actual}"
+        )));
+    }
+    let stored = u32::from_le_bytes(bytes[n - 8..n - 4].try_into().unwrap());
+    let computed = crc32(&bytes[..n - 8]);
+    if stored != computed {
+        return Err(AsnnError::Store(format!(
+            "checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+        )));
+    }
+    Ok(&bytes[8..n - 16])
+}
+
+/// `<path>.tmp` — the staging name used by [`atomic_write`].
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to `path` all-or-nothing: stage in `<path>.tmp`,
+/// fsync, rename into place, then fsync the parent directory so the
+/// rename itself survives power loss. A crash at any point leaves
+/// either the previous complete file or the new complete file at
+/// `path` — never a prefix. Not safe for concurrent writers to the
+/// same `path` (the staging name would collide); the snapshotter is
+/// single-threaded by construction.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    fs::create_dir_all(&dir)?;
+    let tmp = tmp_path(path);
+    let staged = (|| -> Result<()> {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, path)?;
+        Ok(())
+    })();
+    if staged.is_err() {
+        // best-effort cleanup; recover() reaps anything left behind
+        let _ = fs::remove_file(&tmp);
+        return staged;
+    }
+    // Directory fsync makes the rename durable. Best-effort: not every
+    // platform/filesystem lets a directory be opened for sync.
+    if let Ok(d) = File::open(&dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// [`encode_framed`] + [`atomic_write`] in one step.
+pub fn write_framed_atomic(path: &Path, magic: &[u8; 8], payload: &[u8]) -> Result<()> {
+    atomic_write(path, &encode_framed(magic, payload))
+}
+
+/// Read and validate a framed file, returning the payload.
+pub fn read_framed(path: &Path, magic: &[u8; 8]) -> Result<Vec<u8>> {
+    let bytes = fs::read(path)?;
+    let payload = decode_framed(magic, &bytes)?;
+    Ok(payload.to_vec())
+}
+
+/// Move a corrupt file out of the way as `<path>.corrupt` (kept for
+/// post-mortem inspection rather than deleted). Returns the new path.
+pub fn quarantine(path: &Path) -> Result<PathBuf> {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".corrupt");
+    let dest = path.with_file_name(name);
+    // rename() won't overwrite on all platforms; a stale quarantine of
+    // the same file is superseded by the fresh one.
+    let _ = fs::remove_file(&dest);
+    fs::rename(path, &dest)?;
+    Ok(dest)
+}
+
+/// What [`recover`] found and did in a state directory.
+#[derive(Debug, Default)]
+pub struct RecoveryReport {
+    /// Snapshot files examined.
+    pub scanned: usize,
+    /// Snapshot files that passed frame validation.
+    pub valid: usize,
+    /// Corrupt snapshots moved to `<path>.corrupt`.
+    pub quarantined: Vec<PathBuf>,
+    /// Orphaned `.tmp` staging files deleted.
+    pub removed_tmp: Vec<PathBuf>,
+}
+
+impl RecoveryReport {
+    /// One-line `key=value` form for the boot log.
+    pub fn summary(&self) -> String {
+        format!(
+            "scanned={} valid={} quarantined={} tmp_removed={}",
+            self.scanned,
+            self.valid,
+            self.quarantined.len(),
+            self.removed_tmp.len()
+        )
+    }
+}
+
+/// Startup recovery sweep over a state directory: delete orphaned
+/// `.tmp` staging files (uncommitted writes), validate every `.snap`
+/// frame, and quarantine corrupt ones to `<path>.corrupt` with a
+/// structured `store:` log line. A missing directory is an empty
+/// report, not an error — first boot has nothing to recover.
+pub fn recover(dir: &Path) -> Result<RecoveryReport> {
+    let mut report = RecoveryReport::default();
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(report),
+        Err(e) => return Err(e.into()),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let ext = match path.extension().and_then(|e| e.to_str()) {
+            Some(e) => e,
+            None => continue,
+        };
+        if ext == "tmp" {
+            fs::remove_file(&path)?;
+            eprintln!("store: removed_orphan_tmp path={}", path.display());
+            report.removed_tmp.push(path);
+        } else if ext == "snap" {
+            report.scanned += 1;
+            let bytes = fs::read(&path)?;
+            match decode_framed(SNAP_MAGIC, &bytes) {
+                Ok(_) => report.valid += 1,
+                Err(err) => {
+                    let dest = quarantine(&path)?;
+                    eprintln!(
+                        "store: corrupt_quarantined path={} quarantined_to={} reason=\"{err}\"",
+                        path.display(),
+                        dest.display()
+                    );
+                    report.quarantined.push(dest);
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("asnn-store-test-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    const MAGIC: &[u8; 8] = b"ASNNTST1";
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = b"hello snapshot";
+        let framed = encode_framed(MAGIC, payload);
+        assert_eq!(framed.len(), payload.len() + FRAME_OVERHEAD);
+        assert_eq!(decode_framed(MAGIC, &framed).unwrap(), payload);
+    }
+
+    #[test]
+    fn empty_payload_frames() {
+        let framed = encode_framed(MAGIC, b"");
+        assert_eq!(decode_framed(MAGIC, &framed).unwrap(), b"");
+    }
+
+    #[test]
+    fn every_truncation_point_rejected() {
+        let framed = encode_framed(MAGIC, b"0123456789a");
+        for cut in 0..framed.len() {
+            assert!(
+                decode_framed(MAGIC, &framed[..cut]).is_err(),
+                "truncation to {cut}/{} bytes accepted",
+                framed.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_byte_corruption_rejected() {
+        let framed = encode_framed(MAGIC, b"payload under test");
+        for i in 0..framed.len() {
+            let mut bad = framed.clone();
+            bad[i] ^= 0x40;
+            assert!(decode_framed(MAGIC, &bad).is_err(), "flip at byte {i} accepted");
+        }
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let framed = encode_framed(MAGIC, b"x");
+        assert!(decode_framed(b"ASNNTST2", &framed).is_err());
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_tmp() {
+        let dir = tmp_dir("atomic");
+        let path = dir.join("state.snap");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second");
+        assert!(!tmp_path(&path).exists(), "staging file left behind");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_read_framed_file() {
+        let dir = tmp_dir("framed");
+        let path = dir.join("x.snap");
+        write_framed_atomic(&path, MAGIC, b"abc").unwrap();
+        assert_eq!(read_framed(&path, MAGIC).unwrap(), b"abc");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recover_missing_dir_is_empty_report() {
+        let dir = tmp_dir("gone");
+        fs::remove_dir_all(&dir).unwrap();
+        let report = recover(&dir).unwrap();
+        assert_eq!(report.scanned, 0);
+        assert!(report.quarantined.is_empty());
+    }
+
+    #[test]
+    fn recover_reaps_tmp_and_quarantines_torn_snap() {
+        let dir = tmp_dir("recover");
+        // one good snapshot, one torn one, one orphaned staging file
+        let good = dir.join("a.snap");
+        atomic_write(&good, &encode_framed(SNAP_MAGIC, b"good")).unwrap();
+        let torn = dir.join("b.snap");
+        let full = encode_framed(SNAP_MAGIC, b"soon to be torn");
+        fs::write(&torn, &full[..full.len() / 2]).unwrap();
+        fs::write(dir.join("c.snap.tmp"), b"never committed").unwrap();
+
+        let report = recover(&dir).unwrap();
+        assert_eq!(report.scanned, 2);
+        assert_eq!(report.valid, 1);
+        assert_eq!(report.quarantined.len(), 1);
+        assert_eq!(report.removed_tmp.len(), 1);
+        assert!(good.exists());
+        assert!(!torn.exists());
+        assert!(dir.join("b.snap.corrupt").exists());
+        assert!(!dir.join("c.snap.tmp").exists());
+        assert!(report.summary().contains("quarantined=1"));
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,235 @@
+//! Generation-numbered snapshot files with corrupt-file quarantine.
+//!
+//! A [`SnapshotStore`] owns a family of files `<prefix>-<seq>.snap`
+//! inside one state directory. [`save`](SnapshotStore::save) publishes
+//! a new generation atomically and prunes old ones down to `keep`;
+//! [`load_latest`](SnapshotStore::load_latest) walks generations
+//! newest-first, quarantining any that fail frame validation, and
+//! returns the first valid payload — so one torn write (or several)
+//! costs at most the newest generations, never the ability to boot.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+
+use super::{decode_framed, quarantine, write_framed_atomic};
+
+/// Frame magic for snapshot generation files.
+pub const SNAP_MAGIC: &[u8; 8] = b"ASNNSNP1";
+
+/// A validated snapshot returned by [`SnapshotStore::load_latest`].
+#[derive(Debug)]
+pub struct LoadedSnapshot {
+    /// Generation number the payload came from.
+    pub seq: u64,
+    /// The frame payload (caller-defined encoding).
+    pub payload: Vec<u8>,
+    /// Corrupt newer generations quarantined on the way here.
+    pub quarantined: Vec<PathBuf>,
+}
+
+/// One named family of snapshot generations in a state directory.
+#[derive(Debug, Clone)]
+pub struct SnapshotStore {
+    dir: PathBuf,
+    prefix: String,
+    keep: usize,
+}
+
+impl SnapshotStore {
+    /// `keep` is clamped to at least 1 — a store that retains zero
+    /// generations cannot recover anything.
+    pub fn new(dir: impl Into<PathBuf>, prefix: impl Into<String>, keep: usize) -> Self {
+        Self { dir: dir.into(), prefix: prefix.into(), keep: keep.max(1) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+
+    fn path_for(&self, seq: u64) -> PathBuf {
+        // zero-padded so lexicographic and numeric order agree in `ls`
+        self.dir.join(format!("{}-{seq:08}.snap", self.prefix))
+    }
+
+    /// Parse `<prefix>-<seq>.snap` back to its sequence number.
+    fn seq_of(&self, path: &Path) -> Option<u64> {
+        let name = path.file_name()?.to_str()?;
+        let rest = name.strip_prefix(&self.prefix)?.strip_prefix('-')?;
+        rest.strip_suffix(".snap")?.parse().ok()
+    }
+
+    /// All generations on disk for this prefix, sorted oldest-first.
+    /// A missing directory is an empty list (first boot).
+    pub fn generations(&self) -> Result<Vec<(u64, PathBuf)>> {
+        let entries = match fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        };
+        let mut gens = Vec::new();
+        for entry in entries {
+            let path = entry?.path();
+            if let Some(seq) = self.seq_of(&path) {
+                gens.push((seq, path));
+            }
+        }
+        gens.sort_unstable();
+        Ok(gens)
+    }
+
+    /// Frame `payload` and publish it atomically as the next
+    /// generation, then prune generations beyond `keep`. Returns the
+    /// new generation number and path.
+    pub fn save(&self, payload: &[u8]) -> Result<(u64, PathBuf)> {
+        let gens = self.generations()?;
+        let seq = gens.last().map(|&(s, _)| s + 1).unwrap_or(1);
+        let path = self.path_for(seq);
+        write_framed_atomic(&path, SNAP_MAGIC, payload)?;
+        // prune: everything except the newest `keep` (the one just
+        // written included)
+        let total = gens.len() + 1;
+        if total > self.keep {
+            for (_, old) in gens.iter().take(total - self.keep) {
+                let _ = fs::remove_file(old);
+            }
+        }
+        Ok((seq, path))
+    }
+
+    /// Walk generations newest-first and return the first that passes
+    /// frame validation. Corrupt generations encountered on the way
+    /// are quarantined to `<path>.corrupt` (listed in the result so
+    /// the caller can count them). `Ok(None)` means no valid snapshot
+    /// exists — cold boot.
+    pub fn load_latest(&self) -> Result<Option<LoadedSnapshot>> {
+        let mut quarantined = Vec::new();
+        for (seq, path) in self.generations()?.into_iter().rev() {
+            let bytes = fs::read(&path)?;
+            match decode_framed(SNAP_MAGIC, &bytes) {
+                Ok(payload) => {
+                    return Ok(Some(LoadedSnapshot {
+                        seq,
+                        payload: payload.to_vec(),
+                        quarantined,
+                    }));
+                }
+                Err(err) => {
+                    let dest = quarantine(&path)?;
+                    eprintln!(
+                        "store: corrupt_quarantined path={} quarantined_to={} reason=\"{err}\"",
+                        path.display(),
+                        dest.display()
+                    );
+                    quarantined.push(dest);
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(name: &str, keep: usize) -> SnapshotStore {
+        let mut p = std::env::temp_dir();
+        p.push(format!("asnn-snap-test-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        SnapshotStore::new(p, "gen", keep)
+    }
+
+    fn cleanup(s: &SnapshotStore) {
+        fs::remove_dir_all(s.dir()).ok();
+    }
+
+    #[test]
+    fn empty_store_cold_boots() {
+        let s = store("empty", 3);
+        assert!(s.generations().unwrap().is_empty());
+        assert!(s.load_latest().unwrap().is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let s = store("roundtrip", 3);
+        let (seq, path) = s.save(b"generation one").unwrap();
+        assert_eq!(seq, 1);
+        assert!(path.ends_with("gen-00000001.snap"));
+        let loaded = s.load_latest().unwrap().unwrap();
+        assert_eq!(loaded.seq, 1);
+        assert_eq!(loaded.payload, b"generation one");
+        assert!(loaded.quarantined.is_empty());
+        cleanup(&s);
+    }
+
+    #[test]
+    fn newest_generation_wins() {
+        let s = store("newest", 5);
+        s.save(b"one").unwrap();
+        s.save(b"two").unwrap();
+        s.save(b"three").unwrap();
+        assert_eq!(s.load_latest().unwrap().unwrap().payload, b"three");
+        cleanup(&s);
+    }
+
+    #[test]
+    fn prunes_to_keep() {
+        let s = store("prune", 2);
+        for i in 0..5u8 {
+            s.save(&[i]).unwrap();
+        }
+        let gens = s.generations().unwrap();
+        assert_eq!(gens.len(), 2);
+        assert_eq!(gens[0].0, 4);
+        assert_eq!(gens[1].0, 5);
+        cleanup(&s);
+    }
+
+    #[test]
+    fn torn_newest_falls_back_and_quarantines() {
+        let s = store("torn", 3);
+        s.save(b"good").unwrap();
+        let (_, newest) = s.save(b"about to tear").unwrap();
+        let bytes = fs::read(&newest).unwrap();
+        fs::write(&newest, &bytes[..bytes.len() - 3]).unwrap();
+
+        let loaded = s.load_latest().unwrap().unwrap();
+        assert_eq!(loaded.payload, b"good");
+        assert_eq!(loaded.quarantined.len(), 1);
+        assert!(!newest.exists());
+        assert!(loaded.quarantined[0].to_string_lossy().ends_with(".corrupt"));
+        // a second load no longer sees the quarantined file
+        let again = s.load_latest().unwrap().unwrap();
+        assert!(again.quarantined.is_empty());
+        cleanup(&s);
+    }
+
+    #[test]
+    fn all_torn_means_cold_boot() {
+        let s = store("alltorn", 3);
+        for payload in [b"a".as_slice(), b"bb", b"ccc"] {
+            let (_, p) = s.save(payload).unwrap();
+            fs::write(&p, b"x").unwrap();
+        }
+        assert!(s.load_latest().unwrap().is_none());
+        cleanup(&s);
+    }
+
+    #[test]
+    fn foreign_files_ignored() {
+        let s = store("foreign", 3);
+        s.save(b"real").unwrap();
+        fs::write(s.dir().join("other-00000009.snap"), b"not ours").unwrap();
+        fs::write(s.dir().join("notes.txt"), b"also not ours").unwrap();
+        let gens = s.generations().unwrap();
+        assert_eq!(gens.len(), 1);
+        cleanup(&s);
+    }
+}

@@ -1,0 +1,208 @@
+//! Crash-recovery acceptance: a snapshot torn at ANY byte boundary
+//! must never stop the server from booting — the torn generation is
+//! quarantined, the previous generation serves, and HEALTH reports
+//! `status=ok` once the listener is up. Plus wire-hardening e2e:
+//! oversized and garbage request lines never take the server down.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use asnn::coordinator::server::Client;
+use asnn::coordinator::{IoLimits, Metrics, Request, Response, Router, Server};
+use asnn::data::io as dio;
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+use asnn::engine::NnEngine;
+use asnn::grid::{snapshot as grid_snapshot, MultiGrid};
+use asnn::store::{self, ChaosWriter, SnapshotStore};
+use asnn::util::rng::Rng;
+
+fn state_dir(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("asnn-crash-recovery-{}-{name}", std::process::id()));
+    let _ = fs::remove_dir_all(&p);
+    p
+}
+
+/// The acceptance loop: tear the newest grid snapshot at EVERY byte
+/// boundary; after each tear the full recovery path (boot scan →
+/// quarantine → previous generation → engine restore) must produce a
+/// working engine.
+#[test]
+fn every_truncation_point_recovers_to_previous_generation() {
+    let dir = state_dir("every-byte");
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(24, 701)));
+    let grid = MultiGrid::build(&ds, 16).unwrap();
+    let payload = grid_snapshot::to_bytes(&grid);
+
+    let s = SnapshotStore::new(dir.clone(), "grid", 4);
+    s.save(&payload).unwrap(); // gen 1
+    let (_, gen2_path) = s.save(&payload).unwrap(); // gen 2: the fallback
+    let (_, gen3_path) = s.save(&payload).unwrap(); // gen 3: will be torn
+    let full = fs::read(&gen3_path).unwrap();
+    assert_eq!(fs::read(&gen2_path).unwrap(), full);
+
+    for crash_at in 0..full.len() as u64 {
+        let persisted = ChaosWriter::torn_write(&gen3_path, &full, crash_at).unwrap();
+        assert_eq!(persisted, crash_at);
+
+        // boot-time recovery pass quarantines the torn file...
+        let report = store::recover(&dir).unwrap();
+        assert_eq!(
+            report.quarantined.len(),
+            1,
+            "crash_at={crash_at}: torn file not quarantined"
+        );
+        // ...and the previous generation still loads
+        let loaded = s.load_latest().unwrap().unwrap();
+        assert_eq!(loaded.seq, 2, "crash_at={crash_at}");
+        assert_eq!(loaded.payload, payload, "crash_at={crash_at}");
+
+        // the recovered payload rebuilds a working engine
+        let restored = grid_snapshot::from_bytes(&loaded.payload).unwrap();
+        let engine =
+            ActiveEngine::restore(restored, ds.clone(), ActiveParams::default()).unwrap();
+        assert!(!engine.knn(&[0.5, 0.5], 3).unwrap().is_empty(), "crash_at={crash_at}");
+
+        // reset for the next truncation point
+        for q in &report.quarantined {
+            fs::remove_file(q).unwrap();
+        }
+    }
+    fs::remove_dir_all(&dir).ok();
+}
+
+/// End-to-end acceptance: both newest snapshots (dataset + grid) are
+/// torn mid-write; the server boots anyway, serves correct answers
+/// from the previous generation, reports `status=ok` over HEALTH, and
+/// counts the quarantined files in STATS.
+#[test]
+fn torn_snapshots_server_boots_serves_and_reports_ok() {
+    let dir = state_dir("e2e");
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(400, 702)));
+    let grid = MultiGrid::build(&ds, 64).unwrap();
+    let ds_payload = dio::dataset_to_bytes(&ds);
+    let grid_payload = grid_snapshot::to_bytes(&grid);
+
+    let ds_store = SnapshotStore::new(dir.clone(), "dataset", 3);
+    let grid_store = SnapshotStore::new(dir.clone(), "grid", 3);
+    ds_store.save(&ds_payload).unwrap();
+    grid_store.save(&grid_payload).unwrap();
+    // newest generations crash mid-write
+    let (_, torn_ds) = ds_store.save(&ds_payload).unwrap();
+    let (_, torn_grid) = grid_store.save(&grid_payload).unwrap();
+    let full = fs::read(&torn_ds).unwrap();
+    ChaosWriter::torn_write(&torn_ds, &full, (full.len() / 2) as u64).unwrap();
+    let full = fs::read(&torn_grid).unwrap();
+    ChaosWriter::torn_write(&torn_grid, &full, (full.len() / 3) as u64).unwrap();
+
+    // boot exactly like cmd_serve: recovery pass, warm boot, serve
+    let metrics = Arc::new(Metrics::new());
+    metrics.set_recovering(true);
+    let report = store::recover(&dir).unwrap();
+    metrics.record_corrupt_quarantined(report.quarantined.len() as u64);
+    assert_eq!(report.quarantined.len(), 2, "{}", report.summary());
+
+    let ds_snap = ds_store.load_latest().unwrap().unwrap();
+    let booted = Arc::new(dio::dataset_from_bytes(&ds_snap.payload).unwrap());
+    assert_eq!(booted.len(), ds.len());
+    let grid_snap = grid_store.load_latest().unwrap().unwrap();
+    let restored = grid_snapshot::from_bytes(&grid_snap.payload).unwrap();
+    let active = Arc::new(
+        ActiveEngine::restore(restored, booted.clone(), ActiveParams::default()).unwrap(),
+    );
+
+    let mut router = Router::new("active", Arc::clone(&metrics));
+    router.register("brute", Arc::new(BruteEngine::new(booted.clone())));
+    router.register("active", Arc::clone(&active) as Arc<dyn NnEngine>);
+    let handle = Server::new(Arc::new(router), 2).spawn("127.0.0.1:0").unwrap();
+    metrics.set_recovering(false);
+
+    let mut client = Client::connect(&handle.addr).unwrap();
+    match client.call(&Request::Health).unwrap() {
+        Response::Text(t) => assert!(t.contains("status=ok"), "{t}"),
+        other => panic!("{other:?}"),
+    }
+    // the restored index answers like a fresh build
+    let fresh = ActiveEngine::new(ds.clone(), 64, ActiveParams::default()).unwrap();
+    let want: Vec<u32> = fresh.knn(&[0.4, 0.6], 5).unwrap().iter().map(|h| h.id).collect();
+    match client.call(&Request::Knn { k: 5, x: 0.4, y: 0.6, engine: None }).unwrap() {
+        Response::Neighbors(hits) => {
+            let got: Vec<u32> = hits.iter().map(|h| h.id).collect();
+            assert_eq!(got, want);
+        }
+        other => panic!("{other:?}"),
+    }
+    match client.call(&Request::Stats).unwrap() {
+        Response::Text(t) => assert!(t.contains("corrupt_quarantined=2"), "{t}"),
+        other => panic!("{other:?}"),
+    }
+    handle.shutdown();
+    fs::remove_dir_all(&dir).ok();
+}
+
+/// Wire hardening e2e: oversized lines get a structured rejection and
+/// random garbage never kills the server — a fresh client still gets
+/// `pong` after the abuse.
+#[test]
+fn hostile_wire_input_never_kills_the_server() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(500, 703)));
+    let mut router = Router::new("brute", Arc::new(Metrics::new()));
+    router.register("brute", Arc::new(BruteEngine::new(ds)));
+    let router = Arc::new(router);
+    let handle = Server::new(Arc::clone(&router), 2)
+        .with_io_limits(IoLimits { max_line_bytes: 256, ..IoLimits::default() })
+        .spawn("127.0.0.1:0")
+        .unwrap();
+
+    // oversized line: structured rejection, then the connection closes
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(&[b'X'; 4096]).unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR too-long"), "{line}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+
+    // garbage lines (including non-UTF-8 bytes) each get an ERR
+    // response on a connection that stays up
+    let mut rng = Rng::new(704);
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    for round in 0..25 {
+        let len = 1 + rng.below(80) as usize;
+        // any bytes except newline (would split the line) and
+        // whitespace (an all-whitespace line is silently skipped by
+        // the server, which would stall this lock-step read loop)
+        let mut junk = vec![b'\xfe'];
+        junk.extend((0..len).map(|_| {
+            let b = rng.below(256) as u8;
+            if b == b'\n' || b.is_ascii_whitespace() {
+                b'?'
+            } else {
+                b
+            }
+        }));
+        junk.push(b'\n');
+        writer.write_all(&junk).unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        assert!(reader.read_line(&mut resp).unwrap() > 0, "round {round}");
+        assert!(resp.starts_with("ERR"), "round {round}: {resp:?}");
+    }
+
+    // after all the abuse a normal client still gets served
+    let mut client = Client::connect(&handle.addr).unwrap();
+    assert_eq!(client.call(&Request::Ping).unwrap(), Response::Text("pong".into()));
+    assert!(router.metrics().snapshot().oversize_rejected >= 1);
+    handle.shutdown();
+}

@@ -159,6 +159,41 @@ fn prop_pixel_mapping_total() {
     }
 }
 
+/// Property: the wire protocol parsers are total — no input, however
+/// malformed (random token soup or raw bytes through lossy UTF-8),
+/// panics `Request::parse` or `Response::parse`. Hostile clients can
+/// only ever produce `Err`, never take a worker thread down.
+#[test]
+fn prop_protocol_parse_total() {
+    use asnn::coordinator::{Request, Response};
+    let tokens = [
+        "KNN", "CLASSIFY", "PING", "STATS", "HEALTH", "QUIT", "OK", "ERR", "1", "-3",
+        "0.5", "1e308", "-1e-308", "nan", "inf", "18446744073709551616", "x", "=", ";",
+        "\"", "\\", "\u{7f}", "🦀",
+    ];
+    let mut rng = Rng::new(609);
+    for _ in 0..2000 {
+        // token soup: plausible-looking but malformed command lines
+        let len = rng.below(8) as usize;
+        let mut line = String::new();
+        for i in 0..len {
+            if i > 0 {
+                line.push(' ');
+            }
+            line.push_str(tokens[rng.below(tokens.len() as u64) as usize]);
+        }
+        let _ = Request::parse(&line);
+        let _ = Response::parse(&line);
+
+        // raw byte soup (what a lossy-decoded garbage line looks like)
+        let blen = rng.below(64) as usize;
+        let bytes: Vec<u8> = (0..blen).map(|_| rng.below(256) as u8).collect();
+        let text = String::from_utf8_lossy(&bytes);
+        let _ = Request::parse(&text);
+        let _ = Response::parse(&text);
+    }
+}
+
 /// Property: Eq. 1 is scale-consistent — doubling both k and n leaves
 /// the next radius unchanged.
 #[test]
