@@ -1,0 +1,85 @@
+//! PERF — batched query engine throughput: queries/sec of one-at-a-time
+//! KNN dispatch vs a single KNNB batch fanned across a dedicated worker
+//! pool (1/2/4/8 workers). Both paths go through the full router
+//! (breakers, budgets, fallback chain), so the delta is the real
+//! serving-side win, not a kernel microbenchmark. Emits
+//! `BENCH_batch_throughput.json` next to the printed table so the
+//! speedup series is scriptable.
+//!
+//! Run: `cargo bench --bench batch_throughput`
+
+use std::sync::Arc;
+
+use asnn::bench::{run, BenchSpec, Table};
+use asnn::coordinator::{Metrics, Request, Router, ThreadPool};
+use asnn::data::synthetic::{generate, generate_queries, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+
+const N_POINTS: usize = 20_000;
+const RESOLUTION: usize = 1000;
+const K: usize = 10;
+const BATCH: usize = 64;
+
+fn main() {
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(N_POINTS, 1401)));
+    let active =
+        Arc::new(ActiveEngine::new(ds.clone(), RESOLUTION, ActiveParams::default()).unwrap());
+    let brute = Arc::new(BruteEngine::new(ds));
+    let make_router = |pool_workers: Option<usize>| {
+        let mut r = Router::new("active", Arc::new(Metrics::new()));
+        r.register("active", active.clone());
+        r.register("brute", brute.clone());
+        if let Some(w) = pool_workers {
+            r.set_batch_pool(Arc::new(ThreadPool::new(w)));
+        }
+        Arc::new(r)
+    };
+    let queries: Vec<[f64; 2]> =
+        generate_queries(BATCH, 2, 1402).into_iter().map(|q| [q[0], q[1]]).collect();
+
+    // baseline: one router request per query
+    let single_router = make_router(None);
+    let single = run(&BenchSpec::quick(format!("single KNN x{BATCH}")), || {
+        for q in &queries {
+            let resp = single_router.handle(&Request::Knn { k: K, x: q[0], y: q[1], engine: None });
+            std::hint::black_box(resp);
+        }
+    });
+    let single_qps = BATCH as f64 / single.mean_secs;
+
+    let mut table = Table::new(
+        "PERF batch throughput: KNNB vs single KNN (20k pts, k=10, batch=64)",
+        &["mode", "workers", "qps", "speedup"],
+    );
+    table.row(&["single".into(), "-".into(), format!("{single_qps:.0}"), "1.00x".into()]);
+
+    let mut batched_json = Vec::new();
+    for &w in &[1usize, 2, 4, 8] {
+        let router = make_router(Some(w));
+        let req = Request::Knnb { k: K, queries: queries.clone(), engine: None };
+        let res = run(&BenchSpec::quick(format!("knnb w{w}")), || {
+            std::hint::black_box(router.handle(&req));
+        });
+        let qps = BATCH as f64 / res.mean_secs;
+        let speedup = qps / single_qps;
+        table.row(&[
+            "knnb".into(),
+            w.to_string(),
+            format!("{qps:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        batched_json
+            .push(format!("    {{\"workers\": {w}, \"qps\": {qps:.1}, \"speedup\": {speedup:.3}}}"));
+    }
+    table.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"batch_throughput\",\n  \"n_points\": {N_POINTS},\n  \
+         \"resolution\": {RESOLUTION},\n  \"k\": {K},\n  \"batch_size\": {BATCH},\n  \
+         \"single_qps\": {single_qps:.1},\n  \"batched\": [\n{}\n  ]\n}}\n",
+        batched_json.join(",\n")
+    );
+    std::fs::write("BENCH_batch_throughput.json", &json).expect("write BENCH_batch_throughput.json");
+    println!("wrote BENCH_batch_throughput.json");
+}

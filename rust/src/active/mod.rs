@@ -27,6 +27,10 @@ pub struct SearchTrace {
     /// True if the loop ended by |n−k| ≤ tolerance, false if it hit the
     /// max-iteration guard or the radius cap.
     pub converged: bool,
+    /// Radius growth steps resolved from pyramid upper bounds alone —
+    /// coarse-to-fine skips that never paid for an exact disk scan, so
+    /// they appear in neither `steps` nor the work accounting.
+    pub coarse_skips: u32,
 }
 
 impl SearchTrace {

@@ -156,9 +156,25 @@ pub fn collect_in_disk(
     r: u32,
     metric: Metric,
 ) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    collect_in_disk_into(grid, cx, cy, r, metric, &mut out);
+    out
+}
+
+/// [`collect_in_disk`] into a caller-owned buffer (cleared first). The
+/// batched hot path reuses one buffer per worker thread, so the
+/// steady-state candidate sweep allocates nothing.
+pub fn collect_in_disk_into(
+    grid: &MultiGrid,
+    cx: u32,
+    cy: u32,
+    r: u32,
+    metric: Metric,
+    out: &mut Vec<Candidate>,
+) {
     let res = grid.resolution() as i64;
     let (cxi, cyi) = (cx as i64, cy as i64);
-    let mut out = Vec::new();
+    out.clear();
     let dy_lo = (-(r as i64)).max(-cyi);
     let dy_hi = (r as i64).min(res - 1 - cyi);
     for dy in dy_lo..=dy_hi {
@@ -176,7 +192,6 @@ pub fn collect_in_disk(
             out.push(Candidate { point_id: pid, pixel_dist });
         }
     }
-    out
 }
 
 /// Number of pixels a disk scan touches (cost model for §Perf and the
@@ -277,6 +292,16 @@ mod tests {
             for c in &cands {
                 assert!(c.pixel_dist <= (r as f64) * (r as f64) + 1e-9);
             }
+        }
+    }
+
+    #[test]
+    fn collect_into_reuses_buffer_and_matches_fresh() {
+        let g = grid(1500, 120);
+        let mut buf = vec![Candidate { point_id: 999, pixel_dist: -1.0 }];
+        for &(cx, cy, r) in &[(60, 60, 15), (0, 0, 40), (119, 119, 5)] {
+            collect_in_disk_into(&g, cx, cy, r, Metric::L2, &mut buf);
+            assert_eq!(buf, collect_in_disk(&g, cx, cy, r, Metric::L2));
         }
     }
 

@@ -144,6 +144,10 @@ pub struct ServerConfig {
     pub workers: usize,
     pub batch_max: usize,
     pub batch_deadline_us: u64,
+    /// Threads in the dedicated batch fan-out pool (kept separate from
+    /// `workers`, the connection pool, to avoid queueing batch chunks
+    /// behind the very connections that submitted them).
+    pub batch_workers: usize,
 }
 
 /// `[runtime]` section.
@@ -256,6 +260,7 @@ impl Default for AsnnConfig {
                 workers: 2,
                 batch_max: 16,
                 batch_deadline_us: 200,
+                batch_workers: 2,
             },
             runtime: RuntimeConfig {
                 artifacts_dir: "artifacts".into(),
@@ -339,6 +344,8 @@ impl AsnnConfig {
             doc.int_or("server", "batch_max", cfg.server.batch_max as i64) as usize;
         cfg.server.batch_deadline_us =
             doc.int_or("server", "batch_deadline_us", cfg.server.batch_deadline_us as i64) as u64;
+        cfg.server.batch_workers =
+            doc.int_or("server", "batch_workers", cfg.server.batch_workers as i64) as usize;
 
         cfg.resilience.deadline_ms =
             doc.int_or("resilience", "deadline_ms", cfg.resilience.deadline_ms as i64) as u64;
@@ -458,6 +465,9 @@ impl AsnnConfig {
         }
         if self.server.workers == 0 || self.server.batch_max == 0 {
             return Err(AsnnError::Config("server.workers/batch_max must be > 0".into()));
+        }
+        if self.server.batch_workers == 0 {
+            return Err(AsnnError::Config("server.batch_workers must be > 0".into()));
         }
         if self.runtime.window_sizes.is_empty() {
             return Err(AsnnError::Config("runtime.window_sizes must be non-empty".into()));

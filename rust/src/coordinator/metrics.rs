@@ -14,6 +14,10 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub batched_queries: AtomicU64,
+    /// Queries evicted from the batching lane because their request
+    /// budget expired while queueing (published from the batcher's
+    /// authoritative cumulative counter — store, not add).
+    pub expired_dropped: AtomicU64,
     // resilience counters
     pub accept_errors: AtomicU64,
     pub shed: AtomicU64,
@@ -53,6 +57,7 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub batches: u64,
     pub batched_queries: u64,
+    pub expired_dropped: u64,
     pub accept_errors: u64,
     pub shed: u64,
     pub timeouts: u64,
@@ -98,6 +103,12 @@ impl Metrics {
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Sync the lane-eviction counter from the batcher's cumulative
+    /// total (the batcher owns the count; metrics only mirror it).
+    pub fn publish_expired_dropped(&self, total: u64) {
+        self.expired_dropped.store(total, Ordering::Relaxed);
     }
 
     /// Failed `accept()` on the listener socket.
@@ -225,6 +236,7 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_queries: self.batched_queries.load(Ordering::Relaxed),
+            expired_dropped: self.expired_dropped.load(Ordering::Relaxed),
             accept_errors: self.accept_errors.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             timeouts: self.timeouts.load(Ordering::Relaxed),
@@ -255,6 +267,7 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "knn={} classify={} errors={} batches={} batched={} \
+             expired_dropped={} \
              accept_errors={} shed={} timeouts={} retries={} trips={} \
              fallbacks={} panics={} hedges={} hedge_wins={} \
              budget_exhausted={} \
@@ -267,6 +280,7 @@ impl MetricsSnapshot {
             self.errors,
             self.batches,
             self.batched_queries,
+            self.expired_dropped,
             self.accept_errors,
             self.shed,
             self.timeouts,
@@ -311,6 +325,16 @@ mod tests {
         assert_eq!(s.batches, 1);
         assert_eq!(s.batched_queries, 16);
         assert!((s.knn_mean_us - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expired_dropped_has_store_semantics() {
+        let m = Metrics::new();
+        m.publish_expired_dropped(3);
+        m.publish_expired_dropped(5); // cumulative total replaces, never adds
+        let s = m.snapshot();
+        assert_eq!(s.expired_dropped, 5);
+        assert!(s.render().contains("expired_dropped=5"), "{}", s.render());
     }
 
     #[test]

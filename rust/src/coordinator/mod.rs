@@ -25,9 +25,13 @@
 //!                   │                 (active_pjrt → active → kdtree → brute)
 //!                   │
 //!                   ├── metrics ◄── trips / sheds / fallbacks / panics /
-//!                   │               hedges / budget_exhausted / draining
-//!                   └── batcher (groups same-window PJRT queries;
-//!                       deadline counts queue time, expired items drop)
+//!                   │               hedges / budget_exhausted /
+//!                   │               batches / expired_dropped / draining
+//!                   └── batching lane ──► router (engine-less KNNs are
+//!                       grouped by a deadline batcher and dispatched as
+//!                       one KNNB-style batch; the batch fans across a
+//!                       dedicated pool, budget-expired items drop with
+//!                       a timeout to their waiter)
 //! ```
 //!
 //! Shutdown drains: `ServerHandle::shutdown` stops accepting, reports
@@ -57,8 +61,9 @@ pub mod snapshotter;
 pub mod worker;
 
 pub use metrics::Metrics;
-pub use protocol::{Request, Response};
+pub use protocol::{BatchEntry, Request, Response};
 pub use resilience::{Budget, CircuitBreaker, ResiliencePolicy};
 pub use router::Router;
 pub use server::{IoLimits, Server};
 pub use snapshotter::Snapshotter;
+pub use worker::ThreadPool;

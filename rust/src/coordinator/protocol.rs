@@ -3,6 +3,8 @@
 //! Requests:
 //! ```text
 //! KNN <k> <x> <y> [engine]        → OK <id>:<dist>:<label> ...
+//! KNNB <k> <n> <x1> <y1> ... <xn> <yn> [engine]
+//!                                 → OK B <n> ; <entry> ; ... ; <entry>
 //! CLASSIFY <k> <x> <y> [engine]   → OK <label>
 //! STATS                           → OK <metrics text, one line>
 //! HEALTH                          → OK status=... engines=... breakers=... queue_depth=N
@@ -12,15 +14,25 @@
 //! `HEALTH` is for load-balancer readiness probes: it reports the
 //! registered engines, each circuit breaker's state, and the current
 //! queue depth without touching any engine.
+//!
+//! `KNNB` answers one batch in one line: entry `i` belongs to query
+//! `i` and is either a space-joined run of `id:dist:label` triplets
+//! (possibly empty) or `!<domain> <message>` for a per-query failure —
+//! one bad query never poisons its batchmates.
 //! Errors: `ERR <domain> <message>`.
 
 use crate::engine::Neighbor;
 use crate::error::{AsnnError, Result};
 
+/// Largest accepted `KNNB` batch. Checked before any allocation so a
+/// hostile header cannot reserve unbounded memory.
+pub const MAX_BATCH: usize = 4096;
+
 /// A parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Knn { k: usize, x: f64, y: f64, engine: Option<String> },
+    Knnb { k: usize, queries: Vec<[f64; 2]>, engine: Option<String> },
     Classify { k: usize, x: f64, y: f64, engine: Option<String> },
     Stats,
     Health,
@@ -60,6 +72,42 @@ impl Request {
                 let (k, x, y, engine) = parse_query(&mut it)?;
                 Ok(Request::Knn { k, x, y, engine })
             }
+            "KNNB" => {
+                let k: usize = it
+                    .next()
+                    .ok_or_else(|| AsnnError::Protocol("missing k".into()))?
+                    .parse()
+                    .map_err(|_| AsnnError::Protocol("bad k".into()))?;
+                let n: usize = it
+                    .next()
+                    .ok_or_else(|| AsnnError::Protocol("missing n".into()))?
+                    .parse()
+                    .map_err(|_| AsnnError::Protocol("bad n".into()))?;
+                if n == 0 {
+                    return Err(AsnnError::Protocol("empty batch".into()));
+                }
+                if n > MAX_BATCH {
+                    return Err(AsnnError::Protocol(format!(
+                        "batch size {n} exceeds max {MAX_BATCH}"
+                    )));
+                }
+                let mut queries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let x: f64 = it
+                        .next()
+                        .ok_or_else(|| AsnnError::Protocol("missing x".into()))?
+                        .parse()
+                        .map_err(|_| AsnnError::Protocol("bad x".into()))?;
+                    let y: f64 = it
+                        .next()
+                        .ok_or_else(|| AsnnError::Protocol("missing y".into()))?
+                        .parse()
+                        .map_err(|_| AsnnError::Protocol("bad y".into()))?;
+                    queries.push([x, y]);
+                }
+                let engine = it.next().map(|s| s.to_string());
+                Ok(Request::Knnb { k, queries, engine })
+            }
             "CLASSIFY" => {
                 let (k, x, y, engine) = parse_query(&mut it)?;
                 Ok(Request::Classify { k, x, y, engine })
@@ -79,6 +127,17 @@ impl Request {
                 Some(e) => format!("KNN {k} {x} {y} {e}"),
                 None => format!("KNN {k} {x} {y}"),
             },
+            Request::Knnb { k, queries, engine } => {
+                let mut s = format!("KNNB {k} {}", queries.len());
+                for q in queries {
+                    s.push_str(&format!(" {} {}", q[0], q[1]));
+                }
+                if let Some(e) = engine {
+                    s.push(' ');
+                    s.push_str(e);
+                }
+                s
+            }
             Request::Classify { k, x, y, engine } => match engine {
                 Some(e) => format!("CLASSIFY {k} {x} {y} {e}"),
                 None => format!("CLASSIFY {k} {x} {y}"),
@@ -91,11 +150,21 @@ impl Request {
     }
 }
 
+/// One query's slot in a batched (`KNNB`) response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchEntry {
+    /// This query's neighbors (possibly empty).
+    Hits(Vec<Neighbor>),
+    /// This query failed; its batchmates are unaffected.
+    Error { domain: String, message: String },
+}
+
 /// A server response.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Neighbors(Vec<Neighbor>),
     Label(u16),
+    Batch(Vec<BatchEntry>),
     Text(String),
     Error { domain: String, message: String },
 }
@@ -111,6 +180,24 @@ impl Response {
                 format!("OK {}", body.join(" "))
             }
             Response::Label(l) => format!("OK {l}"),
+            Response::Batch(entries) => {
+                let body: Vec<String> = entries
+                    .iter()
+                    .map(|e| match e {
+                        BatchEntry::Hits(hits) => hits
+                            .iter()
+                            .map(|n| format!("{}:{:.6}:{}", n.id, n.dist, n.label))
+                            .collect::<Vec<String>>()
+                            .join(" "),
+                        BatchEntry::Error { domain, message } => {
+                            // the entry separator and newline must never
+                            // appear inside a message
+                            format!("!{domain} {}", message.replace([';', '\n'], " "))
+                        }
+                    })
+                    .collect();
+                format!("OK B {} ; {}", entries.len(), body.join(" ; "))
+            }
             Response::Text(t) => format!("OK {}", t.replace('\n', " | ")),
             Response::Error { domain, message } => {
                 format!("ERR {domain} {}", message.replace('\n', " "))
@@ -128,6 +215,11 @@ impl Response {
             return Err(AsnnError::Protocol(format!("bad response line {line:?}")));
         };
         let rest = rest.trim_start();
+        // batched form next: "B <n> ; <entry> ; ..." (any malformation
+        // falls through to the generic forms — parse stays total)
+        if let Some(batch) = Self::parse_batch(rest) {
+            return Ok(batch);
+        }
         // try neighbors form first: id:dist:label triplets
         if !rest.is_empty() && rest.split_whitespace().all(|t| t.matches(':').count() == 2) {
             let mut hits = Vec::new();
@@ -159,6 +251,51 @@ impl Response {
     pub fn from_error(e: &AsnnError) -> Response {
         Response::Error { domain: e.tag().into(), message: e.to_string() }
     }
+
+    /// Parse the batched `B <n> ; <entry> ; ...` body after `OK `.
+    /// `None` means "not a well-formed batch" and the caller falls
+    /// back to the generic response forms.
+    fn parse_batch(rest: &str) -> Option<Response> {
+        let rest = rest.strip_prefix("B ")?;
+        let (n_str, body) = rest.split_once(" ; ")?;
+        let n: usize = n_str.trim().parse().ok()?;
+        if n == 0 || n > MAX_BATCH {
+            return None;
+        }
+        let chunks: Vec<&str> = body.split(" ; ").collect();
+        if chunks.len() != n {
+            return None;
+        }
+        let mut entries = Vec::with_capacity(n);
+        for chunk in chunks {
+            let chunk = chunk.trim();
+            if let Some(err) = chunk.strip_prefix('!') {
+                let (domain, message) = err.split_once(' ').unwrap_or((err, ""));
+                entries.push(BatchEntry::Error {
+                    domain: domain.into(),
+                    message: message.into(),
+                });
+                continue;
+            }
+            let mut hits = Vec::new();
+            for tok in chunk.split_whitespace() {
+                let parts: Vec<&str> = tok.split(':').collect();
+                if parts.len() != 3 {
+                    return None;
+                }
+                match (
+                    parts[0].parse::<u32>(),
+                    parts[1].parse::<f64>(),
+                    parts[2].parse::<u16>(),
+                ) {
+                    (Ok(id), Ok(dist), Ok(label)) => hits.push(Neighbor { id, dist, label }),
+                    _ => return None,
+                }
+            }
+            entries.push(BatchEntry::Hits(hits));
+        }
+        Some(Response::Batch(entries))
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +310,99 @@ mod tests {
             Request::Knn { k: 11, x: 0.5, y: 0.25, engine: Some("active".into()) }
         );
         assert_eq!(Request::parse(&r.format()).unwrap(), r);
+    }
+
+    #[test]
+    fn knnb_roundtrip() {
+        let r = Request::parse("KNNB 5 3 0.1 0.2 0.3 0.4 0.5 0.6 brute").unwrap();
+        assert_eq!(
+            r,
+            Request::Knnb {
+                k: 5,
+                queries: vec![[0.1, 0.2], [0.3, 0.4], [0.5, 0.6]],
+                engine: Some("brute".into()),
+            }
+        );
+        assert_eq!(Request::parse(&r.format()).unwrap(), r);
+        // engine optional
+        let r2 = Request::parse("knnb 3 1 0.5 0.5").unwrap();
+        assert_eq!(r2, Request::Knnb { k: 3, queries: vec![[0.5, 0.5]], engine: None });
+        assert_eq!(Request::parse(&r2.format()).unwrap(), r2);
+    }
+
+    #[test]
+    fn knnb_rejects_hostile_headers() {
+        assert!(Request::parse("KNNB").is_err());
+        assert!(Request::parse("KNNB 5").is_err());
+        assert!(Request::parse("KNNB 5 0 0.5 0.5").is_err()); // empty batch
+        assert!(Request::parse("KNNB 5 2 0.1 0.2").is_err()); // short coords
+        assert!(Request::parse("KNNB 5 2 0.1 nope 0.3 0.4").is_err());
+        // giant n must be rejected before any allocation happens
+        assert!(Request::parse("KNNB 5 18446744073709551615 0.1 0.2").is_err());
+        assert!(Request::parse(&format!("KNNB 5 {} 0.1 0.2", MAX_BATCH + 1)).is_err());
+    }
+
+    #[test]
+    fn batch_response_roundtrip_with_empty_and_error_entries() {
+        let resp = Response::Batch(vec![
+            BatchEntry::Hits(vec![
+                Neighbor { id: 3, dist: 0.125, label: 1 },
+                Neighbor { id: 9, dist: 0.5, label: 0 },
+            ]),
+            BatchEntry::Hits(vec![]), // a query with zero hits
+            BatchEntry::Error { domain: "query".into(), message: "k = 0 out of range".into() },
+        ]);
+        let line = resp.format();
+        assert!(!line.contains('\n'));
+        match Response::parse(&line).unwrap() {
+            Response::Batch(entries) => {
+                assert_eq!(entries.len(), 3);
+                match &entries[0] {
+                    BatchEntry::Hits(h) => {
+                        assert_eq!(h.len(), 2);
+                        assert_eq!(h[0].id, 3);
+                        assert!((h[0].dist - 0.125).abs() < 1e-9);
+                    }
+                    other => panic!("{other:?}"),
+                }
+                assert_eq!(entries[1], BatchEntry::Hits(vec![]));
+                match &entries[2] {
+                    BatchEntry::Error { domain, message } => {
+                        assert_eq!(domain, "query");
+                        assert!(message.contains("k = 0"));
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_error_messages_cannot_forge_the_entry_separator() {
+        let resp = Response::Batch(vec![
+            BatchEntry::Error { domain: "query".into(), message: "evil ; 1:0.5:0 ; x\n".into() },
+            BatchEntry::Hits(vec![Neighbor { id: 1, dist: 1.0, label: 0 }]),
+        ]);
+        match Response::parse(&resp.format()).unwrap() {
+            Response::Batch(entries) => assert_eq!(entries.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_batch_responses_fall_back_to_text() {
+        for line in [
+            "OK B garbage ; x",
+            "OK B 3 ; only-one-entry",
+            "OK B 1 ; not:triplets:here:4",
+            "OK B 0 ; ",
+        ] {
+            // Text / Label / anything non-panicking is fine — just not a batch
+            if let Response::Batch(_) = Response::parse(line).unwrap() {
+                panic!("{line:?} parsed as batch");
+            }
+        }
     }
 
     #[test]

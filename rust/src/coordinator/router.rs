@@ -19,18 +19,35 @@
 //!   engine and the first success wins, while every retry, backoff
 //!   sleep, and fallback hop draws from one per-request [`Budget`]
 //!   instead of each attempt getting a fresh deadline.
+//!
+//! Batched queries ride the same ladder. A [`Query::Batch`] carries the
+//! whole query set behind an `Arc` plus an optional dedicated
+//! [`ThreadPool`]; the attempt fans contiguous chunks across the pool
+//! (falling back to the engine's own `knn_batch` inline when no pool is
+//! attached or the batch is trivial), and per-query failures come back
+//! as [`BatchEntry::Error`] slots inside a successful batch instead of
+//! failing the flight. Two entry points produce batch queries:
+//!
+//! - the `KNNB` protocol verb (explicit client-side batching);
+//! - the **batching lane** ([`Router::attach_batch_lane`]): engine-less
+//!   `KNN` requests from concurrent connections are grouped by a
+//!   deadline [`Batcher`] and dispatched as one batch, with per-item
+//!   budget eviction surfacing to the evicted client as a timeout and
+//!   to operators via the `expired_dropped` metric.
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
+use super::batcher::Batcher;
 use super::metrics::Metrics;
-use super::protocol::{Request, Response};
+use super::protocol::{BatchEntry, Request, Response};
 use super::resilience::{
     is_client_error, is_retryable, Budget, CircuitBreaker, ResiliencePolicy,
 };
+use super::worker::ThreadPool;
 use crate::engine::{Neighbor, NnEngine};
 use crate::error::{AsnnError, Result};
 use crate::util::timer::Timer;
@@ -38,6 +55,15 @@ use crate::util::timer::Timer;
 /// Default degradation order: most specialised engine first, exact
 /// brute-force scan as the engine of last resort.
 pub const DEFAULT_FALLBACK_CHAIN: [&str; 4] = ["active-pjrt", "active", "kdtree", "brute"];
+
+/// How long a lane waiter is willing to sit on its channel when no
+/// per-request budget is configured (generous: the batcher itself
+/// bounds the real latency; this only guards against a lost reply).
+const LANE_FALLBACK_WAIT: Duration = Duration::from_secs(30);
+
+/// Slack added on top of budget + flush deadline before a lane waiter
+/// gives up on its reply channel.
+const LANE_WAIT_SLACK: Duration = Duration::from_secs(5);
 
 /// Engine registry + dispatch policy.
 pub struct Router {
@@ -47,30 +73,142 @@ pub struct Router {
     policy: ResiliencePolicy,
     default_engine: String,
     metrics: Arc<Metrics>,
+    /// Dedicated pool for fanning batch chunks across cores. Kept
+    /// separate from the server's connection pool on purpose: a batch
+    /// dispatched *from* a connection worker that queued its chunks
+    /// *behind* other connections on the same pool could deadlock
+    /// under load.
+    batch_pool: Option<Arc<ThreadPool>>,
+    batch_lane: OnceLock<BatchLane>,
 }
 
-/// The engine-facing part of a request (small and `Copy` so it can be
-/// re-sent to fallback engines and moved into attempt threads).
-#[derive(Debug, Clone, Copy)]
+/// The engine-facing part of a request. Cheap to clone — the batch
+/// variant shares its query block behind an `Arc` — so it can be
+/// re-sent to fallback engines and moved into attempt threads.
+#[derive(Clone)]
 enum Query {
     Knn { k: usize, x: f64, y: f64 },
     Classify { k: usize, x: f64, y: f64 },
+    Batch { k: usize, queries: Arc<Vec<[f64; 2]>>, pool: Option<Arc<ThreadPool>> },
 }
 
 enum Outcome {
     Hits(Vec<Neighbor>),
     Label(u16),
+    Batch(Vec<BatchEntry>),
+}
+
+/// One engine-less KNN waiting in the batching lane: its query plus
+/// the channel its connection worker is blocked on.
+struct LaneItem {
+    k: usize,
+    x: f64,
+    y: f64,
+    tx: Sender<Response>,
+}
+
+/// The wired-in batching lane: the deadline batcher that groups
+/// engine-less KNN requests, plus how long a waiter should trust its
+/// reply channel before declaring the query lost.
+struct BatchLane {
+    batcher: Batcher<LaneItem>,
+    wait: Duration,
 }
 
 /// What an attempt thread reports back: which chain slot it ran,
 /// whether it was launched as a hedge, and how it went.
 type AttemptReport = (usize, bool, Result<Outcome>);
 
-fn run_query(engine: &dyn NnEngine, q: Query) -> Result<Outcome> {
+fn run_query(engine: &Arc<dyn NnEngine>, q: &Query) -> Result<Outcome> {
     match q {
-        Query::Knn { k, x, y } => engine.knn(&[x, y], k).map(Outcome::Hits),
-        Query::Classify { k, x, y } => engine.classify(&[x, y], k).map(Outcome::Label),
+        Query::Knn { k, x, y } => engine.knn(&[*x, *y], *k).map(Outcome::Hits),
+        Query::Classify { k, x, y } => engine.classify(&[*x, *y], *k).map(Outcome::Label),
+        Query::Batch { k, queries, pool } => {
+            Ok(Outcome::Batch(run_batch(engine, *k, queries, pool.as_ref())))
+        }
     }
+}
+
+/// Run a whole batch on one engine. Infallible by design: per-query
+/// failures (bad input, a lost pool worker) are reported in their own
+/// [`BatchEntry`] slot so one poisoned query cannot sink its
+/// batch-mates. (A panic on the *inline* path still unwinds into
+/// `guarded`, where the normal isolation + fallback machinery takes
+/// over for the whole flight.)
+fn run_batch(
+    engine: &Arc<dyn NnEngine>,
+    k: usize,
+    queries: &Arc<Vec<[f64; 2]>>,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Vec<BatchEntry> {
+    let slots: Vec<Option<Result<Vec<Neighbor>>>> = match pool {
+        Some(pool) if queries.len() > 1 && pool.threads() > 1 => {
+            fan_batch(engine, k, queries, pool)
+        }
+        _ => {
+            let views: Vec<&[f64]> = queries.iter().map(|q| q.as_slice()).collect();
+            engine.knn_batch(&views, k).into_iter().map(Some).collect()
+        }
+    };
+    slots
+        .into_iter()
+        .map(|slot| match slot {
+            Some(Ok(hits)) => BatchEntry::Hits(hits),
+            Some(Err(e)) => {
+                BatchEntry::Error { domain: e.tag().into(), message: e.to_string() }
+            }
+            None => BatchEntry::Error {
+                domain: "runtime".into(),
+                message: "batch worker lost (panic or pool shutdown)".into(),
+            },
+        })
+        .collect()
+}
+
+/// Fan one batch across the dedicated pool in contiguous chunks and
+/// reassemble results by offset. Degrades instead of failing:
+///
+/// - `execute` refused (pool shutting down) → the chunk runs inline on
+///   the calling thread, so no query is dropped;
+/// - a chunk job panics → the pool catches it, the job's sender drops
+///   during unwind, and the missing slots stay `None` for the caller
+///   to surface as per-query errors.
+fn fan_batch(
+    engine: &Arc<dyn NnEngine>,
+    k: usize,
+    queries: &Arc<Vec<[f64; 2]>>,
+    pool: &Arc<ThreadPool>,
+) -> Vec<Option<Result<Vec<Neighbor>>>> {
+    let n = queries.len();
+    let chunk = n.div_ceil(pool.threads());
+    let (tx, rx) = channel::<(usize, Vec<Result<Vec<Neighbor>>>)>();
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        let job_engine = Arc::clone(engine);
+        let job_queries = Arc::clone(queries);
+        let job_tx = tx.clone();
+        let submitted = pool.execute(move || {
+            let views: Vec<&[f64]> =
+                job_queries[start..end].iter().map(|q| q.as_slice()).collect();
+            let _ = job_tx.send((start, job_engine.knn_batch(&views, k)));
+        });
+        if submitted.is_err() {
+            let views: Vec<&[f64]> = queries[start..end].iter().map(|q| q.as_slice()).collect();
+            let _ = tx.send((start, engine.knn_batch(&views, k)));
+        }
+        start = end;
+    }
+    drop(tx); // rx drains until every surviving job has reported
+    let mut slots: Vec<Option<Result<Vec<Neighbor>>>> = (0..n).map(|_| None).collect();
+    for (offset, results) in rx {
+        for (i, r) in results.into_iter().enumerate() {
+            if let Some(slot) = slots.get_mut(offset + i) {
+                *slot = Some(r);
+            }
+        }
+    }
+    slots
 }
 
 fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
@@ -93,12 +231,12 @@ fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
 /// instead of vanishing with the abandoned thread.
 fn guarded(
     engine: &Arc<dyn NnEngine>,
-    q: Query,
+    q: &Query,
     deadline: Option<Duration>,
     metrics: &Arc<Metrics>,
 ) -> Result<Outcome> {
     match deadline {
-        None => catch_unwind(AssertUnwindSafe(|| run_query(engine.as_ref(), q)))
+        None => catch_unwind(AssertUnwindSafe(|| run_query(engine, q)))
             .unwrap_or_else(|p| {
                 metrics.record_panic();
                 Err(AsnnError::Runtime(format!("engine panicked: {}", panic_message(p))))
@@ -106,11 +244,12 @@ fn guarded(
         Some(deadline) => {
             let (tx, rx) = channel();
             let engine = Arc::clone(engine);
+            let q = q.clone();
             let thread_metrics = Arc::clone(metrics);
             std::thread::Builder::new()
                 .name("asnn-deadline".into())
                 .spawn(move || {
-                    let r = catch_unwind(AssertUnwindSafe(|| run_query(engine.as_ref(), q)))
+                    let r = catch_unwind(AssertUnwindSafe(|| run_query(&engine, &q)))
                         .unwrap_or_else(|p| {
                             thread_metrics.record_panic();
                             Err(AsnnError::Runtime(format!(
@@ -140,7 +279,7 @@ fn guarded(
 /// clamped to the remaining budget and backoff sleeps never overrun it.
 fn run_attempt(
     engine: &Arc<dyn NnEngine>,
-    q: Query,
+    q: &Query,
     policy: &ResiliencePolicy,
     budget: Budget,
     metrics: &Arc<Metrics>,
@@ -176,7 +315,7 @@ fn run_attempt(
 fn settle_attempt(
     engine: &Arc<dyn NnEngine>,
     breaker: &Arc<CircuitBreaker>,
-    q: Query,
+    q: &Query,
     policy: &ResiliencePolicy,
     budget: Budget,
     metrics: &Arc<Metrics>,
@@ -221,6 +360,8 @@ impl Router {
             policy,
             default_engine: default_engine.into(),
             metrics,
+            batch_pool: None,
+            batch_lane: OnceLock::new(),
         }
     }
 
@@ -235,6 +376,44 @@ impl Router {
     /// registry are skipped at dispatch time).
     pub fn set_fallback_chain(&mut self, chain: Vec<String>) {
         self.fallback_chain = chain;
+    }
+
+    /// Attach the pool that batched queries fan across. Must be a
+    /// *dedicated* pool (see the field docs for the deadlock rationale).
+    pub fn set_batch_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.batch_pool = Some(pool);
+    }
+
+    /// Wire the batching lane in: engine-less `KNN` requests are held
+    /// up to `deadline` to be grouped (at most `batch_max` per flush)
+    /// and dispatched as one batch through the full resilience ladder.
+    /// With a `budget`, items whose requester has already waited longer
+    /// than it at flush time are evicted instead of processed — the
+    /// waiter gets a timeout error and the eviction shows up in the
+    /// `expired_dropped` metric on the next STATS.
+    ///
+    /// Idempotent after the first call. Takes `&Arc<Self>` because the
+    /// batcher's flush thread needs a (weak) handle back to the router.
+    pub fn attach_batch_lane(
+        self: &Arc<Self>,
+        batch_max: usize,
+        deadline: Duration,
+        budget: Option<Duration>,
+    ) {
+        let weak = Arc::downgrade(self);
+        let process = move |items: Vec<LaneItem>| {
+            if let Some(router) = weak.upgrade() {
+                router.flush_lane(items);
+            }
+            // router gone (shutdown): dropping the items drops their
+            // reply senders, waking every waiter with Disconnected
+        };
+        let batcher = match budget {
+            Some(b) => Batcher::with_budget(batch_max, deadline, b, process),
+            None => Batcher::new(batch_max, deadline, process),
+        };
+        let wait = budget.unwrap_or(LANE_FALLBACK_WAIT) + deadline + LANE_WAIT_SLACK;
+        let _ = self.batch_lane.set(BatchLane { batcher, wait });
     }
 
     pub fn policy(&self) -> &ResiliencePolicy {
@@ -263,13 +442,35 @@ impl Router {
     /// and engine failures map to `Response::Error`.
     pub fn handle(&self, req: &Request) -> Response {
         match req {
-            Request::Knn { k, x, y, engine } => {
-                self.dispatch(Query::Knn { k: *k, x: *x, y: *y }, engine.as_deref())
-            }
+            Request::Knn { k, x, y, engine } => match engine {
+                // explicit engine choice bypasses the lane: the lane
+                // batches onto the default chain only
+                Some(name) => self.dispatch(Query::Knn { k: *k, x: *x, y: *y }, Some(name)),
+                None => match self.try_lane(*k, *x, *y) {
+                    Some(resp) => resp,
+                    None => self.dispatch(Query::Knn { k: *k, x: *x, y: *y }, None),
+                },
+            },
             Request::Classify { k, x, y, engine } => {
                 self.dispatch(Query::Classify { k: *k, x: *x, y: *y }, engine.as_deref())
             }
-            Request::Stats => Response::Text(self.metrics.snapshot().render()),
+            Request::Knnb { k, queries, engine } => {
+                self.metrics.record_batch(queries.len());
+                let q = Query::Batch {
+                    k: *k,
+                    queries: Arc::new(queries.clone()),
+                    pool: self.batch_pool.clone(),
+                };
+                self.dispatch(q, engine.as_deref())
+            }
+            Request::Stats => {
+                // the batcher owns the authoritative eviction count;
+                // sync it into the snapshot before rendering
+                if let Some(lane) = self.batch_lane.get() {
+                    self.metrics.publish_expired_dropped(lane.batcher.expired_dropped());
+                }
+                Response::Text(self.metrics.snapshot().render())
+            }
             Request::Health => Response::Text(self.health_line()),
             Request::Ping => Response::Text("pong".into()),
             Request::Quit => Response::Text("bye".into()),
@@ -312,6 +513,85 @@ impl Router {
         )
     }
 
+    /// Try to route an engine-less KNN through the batching lane.
+    /// `None` means "no lane, or the lane is gone" — the caller falls
+    /// through to direct dispatch, so a dying batcher degrades to
+    /// pre-lane behaviour instead of erroring.
+    ///
+    /// Per-query accounting lives here (not in the batch dispatch): a
+    /// lane client sent KNN and `knn_requests` keeps meaning "KNN verbs
+    /// served" whether or not batching happened behind the scenes.
+    fn try_lane(&self, k: usize, x: f64, y: f64) -> Option<Response> {
+        let lane = self.batch_lane.get()?;
+        let t = Timer::new();
+        let (tx, rx) = channel();
+        if !lane.batcher.submit(LaneItem { k, x, y, tx }) {
+            return None;
+        }
+        match rx.recv_timeout(lane.wait) {
+            Ok(resp) => {
+                match &resp {
+                    Response::Neighbors(_) => self.metrics.record_knn(t.elapsed_ns()),
+                    Response::Error { .. } => self.metrics.record_error(),
+                    _ => {}
+                }
+                Some(resp)
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // the batcher evicted this item: its budget expired
+                // before the batch flushed, and the sender was dropped
+                self.metrics.record_budget_exhausted();
+                self.metrics.record_error();
+                Some(Response::from_error(&AsnnError::Timeout(
+                    "request budget exhausted before its batch flushed".into(),
+                )))
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                self.metrics.record_error();
+                Some(Response::from_error(&AsnnError::Timeout(format!(
+                    "batched query unanswered after {}ms",
+                    lane.wait.as_millis()
+                ))))
+            }
+        }
+    }
+
+    /// Flush one lane batch: group by k (one engine flight per distinct
+    /// k in the window), dispatch through the normal ladder, and route
+    /// each entry back to its waiter. A whole-flight failure (budget
+    /// gone, all circuits open) fans the same error response to every
+    /// waiter in the group.
+    fn flush_lane(&self, items: Vec<LaneItem>) {
+        let mut groups: HashMap<usize, Vec<LaneItem>> = HashMap::new();
+        for item in items {
+            groups.entry(item.k).or_default().push(item);
+        }
+        for (k, group) in groups {
+            self.metrics.record_batch(group.len());
+            let queries: Arc<Vec<[f64; 2]>> =
+                Arc::new(group.iter().map(|it| [it.x, it.y]).collect());
+            let q = Query::Batch { k, queries, pool: self.batch_pool.clone() };
+            match self.dispatch(q, None) {
+                Response::Batch(entries) if entries.len() == group.len() => {
+                    for (item, entry) in group.into_iter().zip(entries) {
+                        let resp = match entry {
+                            BatchEntry::Hits(hits) => Response::Neighbors(hits),
+                            BatchEntry::Error { domain, message } => {
+                                Response::Error { domain, message }
+                            }
+                        };
+                        let _ = item.tx.send(resp);
+                    }
+                }
+                other => {
+                    for item in &group {
+                        let _ = item.tx.send(other.clone());
+                    }
+                }
+            }
+        }
+    }
+
     /// The engines this request may use, in order: the requested one,
     /// then (if fallback is enabled) the registered chain entries.
     fn chain_for<'a>(&'a self, requested: &'a str) -> Vec<&'a str> {
@@ -337,9 +617,9 @@ impl Router {
         }
         let t = Timer::new();
         let outcome = if self.policy.hedge_delay.is_some() || self.policy.budget.is_some() {
-            self.dispatch_hedged(q, requested)
+            self.dispatch_hedged(&q, requested)
         } else {
-            self.dispatch_sequential(q, requested)
+            self.dispatch_sequential(&q, requested)
         };
         match outcome {
             Ok(Outcome::Hits(hits)) => {
@@ -350,6 +630,11 @@ impl Router {
                 self.metrics.record_classify(t.elapsed_ns());
                 Response::Label(label)
             }
+            // batches are accounted where they enter (record_batch at
+            // the KNNB/lane boundary, per-query knn accounting in the
+            // lane): counting them here would skew the single-query
+            // request counters
+            Ok(Outcome::Batch(entries)) => Response::Batch(entries),
             Err(e) => {
                 self.metrics.record_error();
                 Response::from_error(&e)
@@ -360,7 +645,7 @@ impl Router {
     /// Classic path: walk the chain one engine at a time on the calling
     /// thread. Used whenever neither hedging nor budgeting is enabled,
     /// so the default configuration pays no extra thread per request.
-    fn dispatch_sequential(&self, q: Query, requested: &str) -> Result<Outcome> {
+    fn dispatch_sequential(&self, q: &Query, requested: &str) -> Result<Outcome> {
         let budget = Budget::unlimited();
         let mut last_err: Option<AsnnError> = None;
         for name in self.chain_for(requested) {
@@ -392,7 +677,7 @@ impl Router {
     /// gone. The first success wins; a losing attempt's result is
     /// discarded when it eventually lands (its breaker bookkeeping
     /// still runs on its own thread).
-    fn dispatch_hedged(&self, q: Query, requested: &str) -> Result<Outcome> {
+    fn dispatch_hedged(&self, q: &Query, requested: &str) -> Result<Outcome> {
         let budget = Budget::start(self.policy.budget);
         let chain = self.chain_for(requested);
         let (tx, rx) = channel::<AttemptReport>();
@@ -485,7 +770,7 @@ impl Router {
         chain: &[&str],
         next: &mut usize,
         is_hedge: bool,
-        q: Query,
+        q: &Query,
         budget: Budget,
         tx: &Sender<AttemptReport>,
     ) -> bool {
@@ -500,11 +785,12 @@ impl Router {
             let engine = Arc::clone(&self.engines[name]);
             let metrics = Arc::clone(&self.metrics);
             let policy = self.policy;
+            let q = q.clone();
             let tx = tx.clone();
             let spawned = std::thread::Builder::new()
                 .name("asnn-attempt".into())
                 .spawn(move || {
-                    let res = settle_attempt(&engine, &breaker, q, &policy, budget, &metrics);
+                    let res = settle_attempt(&engine, &breaker, &q, &policy, budget, &metrics);
                     let _ = tx.send((idx, is_hedge, res));
                 });
             if spawned.is_ok() {
@@ -855,5 +1141,253 @@ mod tests {
             Response::Text(t) => assert!(t.contains("status=ok"), "{t}"),
             other => panic!("{other:?}"),
         }
+    }
+
+    // ───────────────────────── batch dispatch ─────────────────────────
+
+    #[test]
+    fn knnb_matches_individual_knn_across_pool_chunks() {
+        let mut r = router();
+        // 13 queries over 4 threads: exercises uneven chunking and the
+        // reassembly-by-offset path
+        r.set_batch_pool(Arc::new(ThreadPool::new(4)));
+        let queries: Vec<[f64; 2]> =
+            (0..13).map(|i| [(0.07 * i as f64) % 1.0, (0.13 * i as f64) % 1.0]).collect();
+        let entries =
+            match r.handle(&Request::Knnb { k: 5, queries: queries.clone(), engine: None }) {
+                Response::Batch(entries) => entries,
+                other => panic!("{other:?}"),
+            };
+        assert_eq!(entries.len(), 13);
+        for (q, entry) in queries.iter().zip(&entries) {
+            let single = match r.handle(&Request::Knn { k: 5, x: q[0], y: q[1], engine: None }) {
+                Response::Neighbors(hits) => hits,
+                other => panic!("{other:?}"),
+            };
+            // brute is exact f64 on both paths: bitwise-identical
+            assert_eq!(*entry, BatchEntry::Hits(single));
+        }
+        let s = r.metrics().snapshot();
+        assert_eq!(s.batches, 1, "{s:?}");
+        assert_eq!(s.batched_queries, 13, "{s:?}");
+        // only the 13 follow-up singles count as KNN verbs
+        assert_eq!(s.knn_requests, 13, "{s:?}");
+        assert_eq!(s.errors, 0, "{s:?}");
+    }
+
+    #[test]
+    fn knnb_respects_engine_override_and_rejects_unknown() {
+        let r = router();
+        match r.handle(&Request::Knnb {
+            k: 7,
+            queries: vec![[0.2, 0.8], [0.6, 0.4]],
+            engine: Some("active".into()),
+        }) {
+            Response::Batch(entries) => {
+                assert_eq!(entries.len(), 2);
+                for e in &entries {
+                    assert!(matches!(e, BatchEntry::Hits(_)), "{e:?}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        match r.handle(&Request::Knnb {
+            k: 7,
+            queries: vec![[0.2, 0.8]],
+            engine: Some("nope".into()),
+        }) {
+            Response::Error { domain, .. } => assert_eq!(domain, "coordinator"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn knnb_per_query_errors_ride_inside_an_ok_batch() {
+        let r = router();
+        // k = 0 fails input validation per query, not per flight
+        let resp = r.handle(&Request::Knnb {
+            k: 0,
+            queries: vec![[0.5, 0.5], [0.2, 0.2]],
+            engine: None,
+        });
+        match resp {
+            Response::Batch(entries) => {
+                assert_eq!(entries.len(), 2);
+                for e in &entries {
+                    match e {
+                        BatchEntry::Error { domain, .. } => assert_eq!(domain, "query"),
+                        other => panic!("{other:?}"),
+                    }
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // the flight itself succeeded: no whole-batch error recorded
+        assert_eq!(r.metrics().snapshot().errors, 0);
+    }
+
+    #[test]
+    fn batch_worker_loss_yields_per_entry_errors_not_a_dead_batch() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(500, 99)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let mut r = Router::new("chaos", Arc::new(Metrics::new()));
+        r.register("chaos", Arc::new(ChaosEngine::panicking(brute, 14)));
+        r.set_fallback_chain(vec![]);
+        let pool = Arc::new(ThreadPool::new(2));
+        r.set_batch_pool(Arc::clone(&pool));
+        let resp = r.handle(&Request::Knnb {
+            k: 3,
+            queries: vec![[0.1, 0.1], [0.2, 0.2], [0.3, 0.3], [0.4, 0.4]],
+            engine: None,
+        });
+        match resp {
+            Response::Batch(entries) => {
+                assert_eq!(entries.len(), 4);
+                for e in entries {
+                    match e {
+                        BatchEntry::Error { domain, message } => {
+                            assert_eq!(domain, "runtime");
+                            assert!(message.contains("batch worker lost"), "{message}");
+                        }
+                        other => panic!("{other:?}"),
+                    }
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // both chunk jobs panicked inside the pool (give the workers a
+        // beat to finish their catch_unwind bookkeeping)
+        let mut caught = 0;
+        for _ in 0..50 {
+            caught = pool.panics_caught();
+            if caught == 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(caught, 2, "pool did not isolate the chunk panics");
+    }
+
+    #[test]
+    fn inline_batch_panic_walks_the_fallback_chain() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(500, 90)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let mut r = Router::new("chaos", Arc::new(Metrics::new()));
+        r.register("chaos", Arc::new(ChaosEngine::panicking(Arc::clone(&brute), 15)));
+        r.register("brute", brute);
+        r.set_fallback_chain(vec!["brute".into()]);
+        // no batch pool: the panic surfaces through guarded() and the
+        // whole batch retries on the fallback engine
+        let resp = r.handle(&Request::Knnb {
+            k: 4,
+            queries: vec![[0.5, 0.5], [0.6, 0.4]],
+            engine: None,
+        });
+        match resp {
+            Response::Batch(entries) => {
+                assert_eq!(entries.len(), 2);
+                for e in entries {
+                    match e {
+                        BatchEntry::Hits(hits) => assert_eq!(hits.len(), 4),
+                        other => panic!("{other:?}"),
+                    }
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        let s = r.metrics().snapshot();
+        assert_eq!(s.panics, 1, "{s:?}");
+        assert_eq!(s.fallbacks, 1, "{s:?}");
+    }
+
+    // ───────────────────────── batching lane ──────────────────────────
+
+    #[test]
+    fn lane_batches_concurrent_knn_requests() {
+        let mut r = router();
+        r.set_batch_pool(Arc::new(ThreadPool::new(2)));
+        let r = Arc::new(r);
+        r.attach_batch_lane(8, Duration::from_millis(100), None);
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let x = 0.1 + 0.09 * i as f64;
+                    (x, r.handle(&Request::Knn { k: 5, x, y: 0.5, engine: None }))
+                })
+            })
+            .collect();
+        let answers: Vec<(f64, Response)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (x, resp) in &answers {
+            let hits = match resp {
+                Response::Neighbors(hits) => hits.clone(),
+                other => panic!("{other:?}"),
+            };
+            // engine-override requests skip the lane: direct exact path
+            let direct = match r.handle(&Request::Knn {
+                k: 5,
+                x: *x,
+                y: 0.5,
+                engine: Some("brute".into()),
+            }) {
+                Response::Neighbors(hits) => hits,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(hits, direct);
+        }
+        let s = r.metrics().snapshot();
+        // 8 through the lane + 8 direct comparisons
+        assert_eq!(s.knn_requests, 16, "{s:?}");
+        assert!(s.batches >= 1, "{s:?}");
+        assert_eq!(s.batched_queries, 8, "{s:?}");
+        assert_eq!(s.errors, 0, "{s:?}");
+    }
+
+    #[test]
+    fn lane_evicts_budget_expired_queries_and_reports_them() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(500, 89)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let mut r = Router::new("chaos", Arc::new(Metrics::new()));
+        r.register("chaos", Arc::new(ChaosEngine::slow(brute, Duration::from_millis(250), 16)));
+        let r = Arc::new(r);
+        r.attach_batch_lane(16, Duration::from_millis(5), Some(Duration::from_millis(50)));
+
+        // the first query flushes alone at ~5ms and stalls the lane on
+        // the 250ms engine
+        let r0 = Arc::clone(&r);
+        let first = std::thread::spawn(move || {
+            r0.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None })
+        });
+        std::thread::sleep(Duration::from_millis(40));
+        // these sit queued past their 50ms budget while the lane stalls
+        let late: Vec<_> = (0..2)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    r.handle(&Request::Knn { k: 3, x: 0.4, y: 0.6, engine: None })
+                })
+            })
+            .collect();
+        match first.join().unwrap() {
+            Response::Neighbors(hits) => assert_eq!(hits.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        for h in late {
+            match h.join().unwrap() {
+                Response::Error { domain, message } => {
+                    assert_eq!(domain, "timeout");
+                    assert!(message.contains("budget exhausted"), "{message}");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        r.handle(&Request::Stats); // syncs expired_dropped from the batcher
+        let s = r.metrics().snapshot();
+        assert_eq!(s.expired_dropped, 2, "{s:?}");
+        assert_eq!(s.budget_exhausted, 2, "{s:?}");
+        assert_eq!(s.errors, 2, "{s:?}");
+        assert_eq!(s.knn_requests, 1, "{s:?}");
+        assert_eq!(s.batched_queries, 1, "{s:?}");
     }
 }

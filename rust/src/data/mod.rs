@@ -1,6 +1,7 @@
 //! Datasets: point/label storage, synthetic generators, and I/O.
 
 pub mod io;
+pub mod soa;
 pub mod synthetic;
 
 use crate::error::{AsnnError, Result};

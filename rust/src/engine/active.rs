@@ -10,13 +10,15 @@
 //! `refined` mode (exact re-rank of the final circle via the grid's
 //! point buckets), and a density-informed r₀ policy (ABL-R0).
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
-use super::{Neighbor, NnEngine, QueryStats};
+use super::{Neighbor, NnEngine, QueryStats, TopK};
 use crate::active::radius::{RadiusPolicy, Step};
 use crate::active::scan;
 use crate::active::{SearchStep, SearchTrace};
 use crate::config::{Metric, R0Policy, SearchMode};
+use crate::data::soa::SoaMirror;
 use crate::data::Dataset;
 use crate::error::{AsnnError, Result};
 use crate::grid::{MultiGrid, Pyramid};
@@ -30,6 +32,11 @@ pub struct ActiveParams {
     pub mode: SearchMode,
     pub r0_policy: R0Policy,
     pub tolerance: u32,
+    /// Coarse-to-fine radius fast-forward: before paying for any exact
+    /// O(r) disk scan, grow `r` while a pyramid upper bound proves the
+    /// circle cannot yet hold k points. Off by default (the paper's
+    /// loop measures every radius).
+    pub coarse_skip: bool,
 }
 
 impl Default for ActiveParams {
@@ -41,6 +48,7 @@ impl Default for ActiveParams {
             mode: SearchMode::Approx,
             r0_policy: R0Policy::Fixed,
             tolerance: 0,
+            coarse_skip: false,
         }
     }
 }
@@ -60,7 +68,38 @@ pub struct ActiveEngine {
     grid: MultiGrid,
     data: Option<Arc<Dataset>>,
     pyramid: Option<Pyramid>,
+    /// Blocked SoA f32 mirror driving the refined-mode distance kernel
+    /// (built only when the dataset is present and mode is `Refined`).
+    soa: Option<SoaMirror>,
     params: ActiveParams,
+}
+
+/// Per-thread query scratch: every buffer the hot path needs, reusable
+/// across the queries of a batch. `const`-constructible so it can live
+/// in a `thread_local!` slot on the coordinator's long-lived workers —
+/// after warm-up, a query allocates nothing but its returned hits.
+struct Scratch {
+    cands: Vec<scan::Candidate>,
+    ids: Vec<u32>,
+    dists: Vec<f32>,
+    counts: Vec<u64>,
+    top: TopK,
+}
+
+impl Scratch {
+    const fn new() -> Self {
+        Self {
+            cands: Vec::new(),
+            ids: Vec::new(),
+            dists: Vec::new(),
+            counts: Vec::new(),
+            top: TopK::empty(),
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = const { RefCell::new(Scratch::new()) };
 }
 
 impl ActiveEngine {
@@ -102,12 +141,16 @@ impl ActiveEngine {
     }
 
     fn assemble(grid: MultiGrid, data: Option<Arc<Dataset>>, params: ActiveParams) -> Self {
-        let pyramid = if params.r0_policy == R0Policy::Density {
+        let pyramid = if params.r0_policy == R0Policy::Density || params.coarse_skip {
             Some(Pyramid::build(&grid))
         } else {
             None
         };
-        Self { grid, data, pyramid, params }
+        let soa = match (&data, params.mode) {
+            (Some(ds), SearchMode::Refined) => Some(SoaMirror::build(ds)),
+            _ => None,
+        };
+        Self { grid, data, pyramid, soa, params }
     }
 
     pub fn grid(&self) -> &MultiGrid {
@@ -161,9 +204,26 @@ impl ActiveEngine {
         let geom = self.grid.geometry();
         let (cx, cy) = geom.pixel_of(q[0], q[1]);
         let mut r = self.initial_radius(cx, cy, k).max(1);
-        let mut policy =
-            RadiusPolicy::new(k, self.params.tolerance, self.params.max_iters, self.r_max());
+        let r_max = self.r_max();
+        let mut policy = RadiusPolicy::new(k, self.params.tolerance, self.params.max_iters, r_max);
         let mut trace = SearchTrace::default();
+        // Coarse-to-fine fast-forward: while even a pyramid *upper*
+        // bound on the disk count falls short of k, the exact O(r) scan
+        // below cannot succeed either, so grow r by Eq. 1 against the
+        // bound — each skipped radius costs O(r / 2^level) row sums
+        // instead of a full scan, and never appears in `trace.steps`.
+        if let Some(pyr) = self.pyramid.as_ref().filter(|_| self.params.coarse_skip) {
+            let level = (pyr.num_levels() - 1).min(2);
+            while trace.coarse_skips < self.params.max_iters && r < r_max {
+                let bound = pyr.count_in_disk_bound(level, cx, cy, r, self.params.metric);
+                if bound >= k as u64 {
+                    break;
+                }
+                let next = RadiusPolicy::eq1(r, k as u64, bound.max(1)).max(r + 1);
+                r = next.min(r_max);
+                trace.coarse_skips += 1;
+            }
+        }
         loop {
             let n = count(cx, cy, r);
             trace.steps.push(SearchStep { r, n });
@@ -193,6 +253,82 @@ impl ActiveEngine {
 
     fn label_of(&self, pid: u32) -> u16 {
         self.data.as_ref().map(|d| d.label(pid as usize)).unwrap_or(0)
+    }
+
+    /// One query through a caller-owned [`Scratch`] — the shared body
+    /// of `knn_stats` and `knn_batch`. Candidates stream through the
+    /// bounded [`TopK`] heap (no full sort, no truncate); refined mode
+    /// runs the SoA f32 kernel over the candidate ids and defers the
+    /// square root to the k survivors.
+    fn knn_stats_scratch(
+        &self,
+        q: &[f64],
+        k: usize,
+        s: &mut Scratch,
+    ) -> Result<(Vec<Neighbor>, QueryStats)> {
+        let circle = self.search(q, k)?;
+        scan::collect_in_disk_into(
+            &self.grid,
+            circle.cx,
+            circle.cy,
+            circle.r,
+            self.params.metric,
+            &mut s.cands,
+        );
+        let px_len = self.grid.geometry().pixel_size()[0];
+        s.top.reset(k);
+        let squared = match self.params.mode {
+            SearchMode::Approx => {
+                for c in &s.cands {
+                    let dist = match self.params.metric {
+                        Metric::L2 => c.pixel_dist.sqrt() * px_len,
+                        Metric::L1 => c.pixel_dist * px_len,
+                    };
+                    if dist < s.top.worst() {
+                        let label = self.label_of(c.point_id);
+                        s.top.push(Neighbor { id: c.point_id, dist, label });
+                    }
+                }
+                false
+            }
+            SearchMode::Refined => {
+                let data = self.data.as_ref().ok_or_else(|| {
+                    AsnnError::Query(
+                        "refined mode requires the dataset (build with ActiveEngine::new)".into(),
+                    )
+                })?;
+                let soa = self.soa.as_ref().expect("SoA mirror exists whenever data does");
+                s.ids.clear();
+                s.ids.extend(s.cands.iter().map(|c| c.point_id));
+                let qf = [q[0] as f32, q[1] as f32];
+                soa.dist2_ids_into(&s.ids, &qf, &mut s.dists);
+                for (&id, &d2) in s.ids.iter().zip(s.dists.iter()) {
+                    let d2 = d2 as f64;
+                    if d2 < s.top.worst() {
+                        s.top.push(Neighbor { id, dist: d2, label: data.label(id as usize) });
+                    }
+                }
+                true
+            }
+        };
+        let mut out = s.top.drain_sorted();
+        if squared {
+            for h in &mut out {
+                h.dist = h.dist.sqrt();
+            }
+        }
+        let work: u64 = circle
+            .trace
+            .steps
+            .iter()
+            .map(|st| scan::disk_pixels(st.r, self.params.metric))
+            .sum();
+        let stats = QueryStats {
+            work,
+            iterations: circle.trace.iterations() as u32,
+            converged: circle.trace.converged,
+        };
+        Ok((out, stats))
     }
 
     fn check(&self, q: &[f64], k: usize) -> Result<()> {
@@ -226,77 +362,47 @@ impl NnEngine for ActiveEngine {
     }
 
     fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
-        let circle = self.search(q, k)?;
-        let cands =
-            scan::collect_in_disk(&self.grid, circle.cx, circle.cy, circle.r, self.params.metric);
-        let px_len = self.grid.geometry().pixel_size()[0];
-        let mut out: Vec<Neighbor> = match self.params.mode {
-            SearchMode::Approx => cands
-                .into_iter()
-                .map(|c| {
-                    let dist = match self.params.metric {
-                        Metric::L2 => c.pixel_dist.sqrt() * px_len,
-                        Metric::L1 => c.pixel_dist * px_len,
-                    };
-                    Neighbor { id: c.point_id, dist, label: self.label_of(c.point_id) }
-                })
-                .collect(),
-            SearchMode::Refined => {
-                let data = self.data.as_ref().ok_or_else(|| {
-                    AsnnError::Query(
-                        "refined mode requires the dataset (build with ActiveEngine::new)".into(),
-                    )
-                })?;
-                cands
-                    .into_iter()
-                    .map(|c| {
-                        let id = c.point_id as usize;
-                        Neighbor { id: c.point_id, dist: data.dist2(id, q).sqrt(), label: data.label(id) }
-                    })
-                    .collect()
-            }
-        };
-        out.sort_by(|a, b| {
-            a.dist
-                .partial_cmp(&b.dist)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.id.cmp(&b.id))
-        });
-        out.truncate(k);
-        let work: u64 = circle
-            .trace
-            .steps
-            .iter()
-            .map(|s| scan::disk_pixels(s.r, self.params.metric))
-            .sum();
-        let stats = QueryStats {
-            work,
-            iterations: circle.trace.iterations() as u32,
-            converged: circle.trace.converged,
-        };
-        Ok((out, stats))
+        SCRATCH.with(|s| self.knn_stats_scratch(q, k, &mut s.borrow_mut()))
+    }
+
+    /// Batched kNN: borrow this worker's scratch once for the whole
+    /// batch — candidate, id, distance, and heap buffers are reused
+    /// across every query in it.
+    fn knn_batch(&self, queries: &[&[f64]], k: usize) -> Vec<Result<Vec<Neighbor>>> {
+        SCRATCH.with(|s| {
+            let s = &mut *s.borrow_mut();
+            queries
+                .iter()
+                .map(|q| self.knn_stats_scratch(q, k, s).map(|(hits, _)| hits))
+                .collect()
+        })
     }
 
     /// The paper's classification: per-class counts inside the final
     /// circle (one count image per class), argmax vote.
     fn classify(&self, q: &[f64], k: usize) -> Result<u16> {
         let circle = self.search(q, k)?;
-        let mut counts = vec![0u64; self.grid.num_classes()];
-        scan::class_counts_in_disk(
-            &self.grid,
-            circle.cx,
-            circle.cy,
-            circle.r,
-            self.params.metric,
-            &mut counts,
-        );
-        let best = counts
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
-            .map(|(c, _)| c as u16)
-            .unwrap_or(0);
-        Ok(best)
+        SCRATCH.with(|s| {
+            let s = &mut *s.borrow_mut();
+            s.counts.clear();
+            s.counts.resize(self.grid.num_classes(), 0);
+            scan::class_counts_in_disk(
+                &self.grid,
+                circle.cx,
+                circle.cy,
+                circle.r,
+                self.params.metric,
+                &mut s.counts,
+            );
+            let best = s
+                .counts
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+                .map(|(c, _)| c as u16)
+                .unwrap_or(0);
+            Ok(best)
+        })
     }
 }
 
@@ -402,6 +508,78 @@ mod tests {
             itd += dens.search(q, 11).unwrap().trace.iterations() as u32;
         }
         assert!(itd <= itf, "density {itd} vs fixed {itf}");
+    }
+
+    #[test]
+    fn knn_batch_matches_sequential_knn() {
+        for params in [
+            ActiveParams::default(),
+            ActiveParams { mode: SearchMode::Refined, tolerance: 2, ..Default::default() },
+        ] {
+            let e = engine(10_000, 1000, params);
+            let queries = generate_queries(13, 2, 64); // odd batch size
+            let views: Vec<&[f64]> = queries.iter().map(|q| q.as_slice()).collect();
+            let batched = e.knn_batch(&views, 7);
+            assert_eq!(batched.len(), queries.len());
+            for (q, b) in queries.iter().zip(batched) {
+                let single = e.knn(q, 7).unwrap();
+                let b = b.unwrap();
+                assert_eq!(b.len(), single.len());
+                for (x, y) in b.iter().zip(&single) {
+                    assert_eq!(x.id, y.id);
+                    assert_eq!(x.dist, y.dist);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn knn_batch_isolates_per_query_errors() {
+        let e = engine(1000, 300, ActiveParams::default());
+        let good = [0.5, 0.5];
+        let bad = [0.5]; // wrong dim
+        let views: Vec<&[f64]> = vec![&good, &bad, &good];
+        let out = e.knn_batch(&views, 5);
+        assert!(out[0].is_ok());
+        assert!(out[1].is_err());
+        assert!(out[2].is_ok());
+    }
+
+    #[test]
+    fn coarse_skip_reduces_scans_and_keeps_answers_valid() {
+        // sparse data + tiny r0: the fixed engine burns exact scans
+        // growing the radius; the skipping engine resolves that growth
+        // from pyramid bounds and must reach a valid answer
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(1000, 61)));
+        let plain = ActiveEngine::new(ds.clone(), 3000, ActiveParams::default()).unwrap();
+        let skip = ActiveEngine::new(
+            ds,
+            3000,
+            ActiveParams { coarse_skip: true, ..Default::default() },
+        )
+        .unwrap();
+        let queries = generate_queries(10, 2, 65);
+        let (mut it_plain, mut it_skip, mut skips) = (0usize, 0usize, 0u32);
+        for q in &queries {
+            let a = plain.search(q, 11).unwrap();
+            let b = skip.search(q, 11).unwrap();
+            it_plain += a.trace.iterations();
+            it_skip += b.trace.iterations();
+            skips += b.trace.coarse_skips;
+            assert_eq!(a.trace.coarse_skips, 0);
+            if b.trace.converged {
+                assert!(b.n_inside >= 11);
+            }
+            // skipped radii were proven short of k by a sound upper
+            // bound, so the final circle is just as valid
+            let hits = skip.knn(q, 11).unwrap();
+            assert!(hits.len() <= 11);
+            for w in hits.windows(2) {
+                assert!(w[0].dist <= w[1].dist);
+            }
+        }
+        assert!(skips > 0, "fast-forward never engaged on sparse data");
+        assert!(it_skip <= it_plain, "skip {it_skip} vs plain {it_plain} exact scans");
     }
 
     #[test]

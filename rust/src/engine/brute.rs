@@ -3,11 +3,18 @@
 //! Linear scan with a bounded top-k heap. O(N·d) per query: the blue
 //! crosses in Fig. 3 that grow linearly with N.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
 use super::{Neighbor, NnEngine, QueryStats, TopK};
 use crate::data::Dataset;
 use crate::error::{AsnnError, Result};
+
+thread_local! {
+    // one reusable heap per worker thread: the batched path pays for a
+    // heap allocation once per thread, not once per query
+    static BRUTE_TOP: RefCell<TopK> = const { RefCell::new(TopK::empty()) };
+}
 
 /// Exact linear-scan engine.
 pub struct BruteEngine {
@@ -21,6 +28,27 @@ impl BruteEngine {
 
     pub fn dataset(&self) -> &Arc<Dataset> {
         &self.data
+    }
+
+    /// Exact scan into a caller-owned heap — shared by the single and
+    /// batched paths. Stays `f64` end to end: brute force is the
+    /// oracle the approximate engines are tested against, so it never
+    /// trades precision for speed.
+    fn knn_into(&self, q: &[f64], k: usize, top: &mut TopK) -> Result<Vec<Neighbor>> {
+        self.check(q, k)?;
+        top.reset(k);
+        let n = self.data.len();
+        for i in 0..n {
+            let d2 = self.data.dist2(i, q);
+            if d2 < top.worst() {
+                top.push(Neighbor { id: i as u32, dist: d2, label: self.data.label(i) });
+            }
+        }
+        let mut hits = top.drain_sorted();
+        for h in &mut hits {
+            h.dist = h.dist.sqrt(); // convert squared → true distance once
+        }
+        Ok(hits)
     }
 
     fn check(&self, q: &[f64], k: usize) -> Result<()> {
@@ -55,20 +83,17 @@ impl NnEngine for BruteEngine {
     }
 
     fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
-        self.check(q, k)?;
-        let mut top = TopK::new(k);
-        let n = self.data.len();
-        for i in 0..n {
-            let d2 = self.data.dist2(i, q);
-            if d2 < top.worst() {
-                top.push(Neighbor { id: i as u32, dist: d2, label: self.data.label(i) });
-            }
-        }
-        let mut hits = top.into_sorted();
-        for h in &mut hits {
-            h.dist = h.dist.sqrt(); // convert squared → true distance once
-        }
-        Ok((hits, QueryStats { work: n as u64, iterations: 0, converged: true }))
+        let hits = BRUTE_TOP.with(|t| self.knn_into(q, k, &mut t.borrow_mut()))?;
+        Ok((hits, QueryStats { work: self.data.len() as u64, iterations: 0, converged: true }))
+    }
+
+    /// Batched exact scan: one thread-local heap borrow for the whole
+    /// batch.
+    fn knn_batch(&self, queries: &[&[f64]], k: usize) -> Vec<Result<Vec<Neighbor>>> {
+        BRUTE_TOP.with(|t| {
+            let top = &mut *t.borrow_mut();
+            queries.iter().map(|q| self.knn_into(q, k, top)).collect()
+        })
     }
 }
 
@@ -114,6 +139,18 @@ mod tests {
         for (h, (d, id)) in hits.iter().zip(all.iter()) {
             assert!((h.dist - d).abs() < 1e-12);
             assert_eq!(h.id, *id);
+        }
+    }
+
+    #[test]
+    fn knn_batch_matches_sequential_exactly() {
+        let e = engine(400, 8);
+        let queries = generate_queries(9, 2, 9);
+        let views: Vec<&[f64]> = queries.iter().map(|q| q.as_slice()).collect();
+        let batched = e.knn_batch(&views, 5);
+        for (q, b) in queries.iter().zip(batched) {
+            let single = e.knn(q, 5).unwrap();
+            assert_eq!(b.unwrap(), single); // bitwise-identical f64 path
         }
     }
 

@@ -59,6 +59,16 @@ pub trait NnEngine: Send + Sync {
     /// k nearest neighbors of `q`, sorted by ascending distance.
     fn knn(&self, q: &[f64], k: usize) -> Result<Vec<Neighbor>>;
 
+    /// Batched kNN: one result per query, in input order. The default
+    /// walks the batch sequentially; engines override it to amortize
+    /// per-thread scratch buffers across the batch so the steady-state
+    /// hot path performs no allocations beyond the returned hit vecs.
+    /// Per-query failures (bad dim, k out of range) land in their own
+    /// slot and never poison the rest of the batch.
+    fn knn_batch(&self, queries: &[&[f64]], k: usize) -> Vec<Result<Vec<Neighbor>>> {
+        queries.iter().map(|q| self.knn(q, k)).collect()
+    }
+
     /// kNN with work accounting.
     fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
         let hits = self.knn(q, k)?;
@@ -105,13 +115,41 @@ impl TopK {
         Self { k, heap: Vec::with_capacity(k + 1) }
     }
 
-    /// Current worst distance among the kept k (∞ until full).
+    /// An empty heap with `k = 0`, `const`-constructible so it can sit
+    /// in a `thread_local!` scratch slot. Call [`reset`](Self::reset)
+    /// with the real `k` before use — until then every push is dropped.
+    pub const fn empty() -> Self {
+        Self { k: 0, heap: Vec::new() }
+    }
+
+    /// Re-arm for a new query of size `k`, keeping the heap allocation.
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.heap.clear();
+    }
+
+    /// Like [`into_sorted`](Self::into_sorted), but leaves the emptied
+    /// heap (and its allocation) behind for reuse by the next query.
+    pub fn drain_sorted(&mut self) -> Vec<Neighbor> {
+        self.heap.sort_by(|a, b| {
+            a.dist
+                .partial_cmp(&b.dist)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        let out = self.heap.clone();
+        self.heap.clear();
+        out
+    }
+
+    /// Current worst distance among the kept k (∞ until full, −∞ for
+    /// the degenerate `k = 0` so callers prune everything).
     #[inline]
     pub fn worst(&self) -> f64 {
         if self.heap.len() < self.k {
             f64::INFINITY
         } else {
-            self.heap[0].dist
+            self.heap.first().map_or(f64::NEG_INFINITY, |top| top.dist)
         }
     }
 
@@ -120,7 +158,7 @@ impl TopK {
         if self.heap.len() < self.k {
             self.heap.push(n);
             self.sift_up(self.heap.len() - 1);
-        } else if n.dist < self.heap[0].dist {
+        } else if self.heap.first().is_some_and(|top| n.dist < top.dist) {
             self.heap[0] = n;
             self.sift_down(0);
         }
@@ -213,6 +251,28 @@ mod tests {
         t.push(nb(0, 1.0));
         t.push(nb(1, 0.5));
         assert_eq!(t.into_sorted().len(), 2);
+    }
+
+    #[test]
+    fn topk_reset_reuses_allocation_across_queries() {
+        let mut t = TopK::empty();
+        assert_eq!(t.worst(), f64::NEG_INFINITY); // unarmed: prune all
+        t.push(nb(0, 1.0)); // dropped — not armed yet
+        assert!(t.is_empty());
+        t.reset(2);
+        for (i, d) in [4.0, 1.0, 3.0, 2.0].iter().enumerate() {
+            t.push(nb(i as u32, *d));
+        }
+        let first: Vec<f64> = t.drain_sorted().iter().map(|n| n.dist).collect();
+        assert_eq!(first, vec![1.0, 2.0]);
+        // second query through the same scratch
+        t.reset(1);
+        t.push(nb(7, 9.0));
+        t.push(nb(8, 0.5));
+        let second = t.drain_sorted();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].id, 8);
+        assert!(t.is_empty());
     }
 
     #[test]

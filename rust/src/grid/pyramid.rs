@@ -11,6 +11,7 @@
 //!   bounds the fine count, letting the engine skip scan iterations.
 
 use super::MultiGrid;
+use crate::config::Metric;
 
 /// Summed 2×2 reduction pyramid over the total-count image.
 #[derive(Debug, Clone)]
@@ -19,11 +20,24 @@ pub struct Pyramid {
     levels: Vec<Vec<u32>>,
     /// Side length per level.
     resolutions: Vec<usize>,
+    /// Per-level row prefix sums, `row_prefix[l][y * (res_l + 1) + x]`
+    /// = points in row `y` strictly left of column `x` — O(1) row-span
+    /// sums at every level for coarse-to-fine disk bounds.
+    row_prefix: Vec<Vec<u32>>,
 }
 
 impl Pyramid {
     /// Build from a grid. Levels stop when resolution would drop
     /// below 8 pixels.
+    ///
+    /// Resolutions halve with `div_ceil`, so an odd trailing row or
+    /// column folds into the last coarse cell instead of being
+    /// dropped. That keeps the level sums equal to `n_points` at every
+    /// level for every resolution — the invariant that makes a coarse
+    /// count a sound **upper** bound on a fine count (a lossy level
+    /// could under-count and wrongly let the engine skip a radius).
+    /// The level-`l` cell `x` still covers exactly the level-0 range
+    /// `[x·2^l, (x+1)·2^l − 1] ∩ image`, so `>> level` mapping holds.
     pub fn build(grid: &MultiGrid) -> Self {
         let r0 = grid.resolution();
         let mut levels: Vec<Vec<u32>> = Vec::new();
@@ -33,31 +47,51 @@ impl Pyramid {
         resolutions.push(r0);
         loop {
             let prev_res = *resolutions.last().unwrap();
-            let next_res = prev_res / 2;
+            let next_res = prev_res.div_ceil(2);
             if next_res < 8 {
                 break;
             }
             let prev = levels.last().unwrap();
             let mut next = vec![0u32; next_res * next_res];
-            for y in 0..next_res {
-                for x in 0..next_res {
-                    let mut s = 0u32;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            let sy = y * 2 + dy;
-                            let sx = x * 2 + dx;
-                            if sy < prev_res && sx < prev_res {
-                                s += prev[sy * prev_res + sx];
-                            }
-                        }
+            // 2×2 reduction with the edge handling hoisted out of the
+            // inner loop: interior destination cells always have both
+            // source rows and columns in range, so they reduce via
+            // bounds-check-free slice iterators; an odd trailing source
+            // row/column is folded in once, outside the hot loop.
+            let full = prev_res / 2;
+            for (y, dst) in next.chunks_exact_mut(next_res).enumerate() {
+                let row0 = &prev[(y * 2) * prev_res..(y * 2 + 1) * prev_res];
+                if y < full {
+                    let row1 = &prev[(y * 2 + 1) * prev_res..(y * 2 + 2) * prev_res];
+                    for ((d, a), b) in dst[..full]
+                        .iter_mut()
+                        .zip(row0.chunks_exact(2))
+                        .zip(row1.chunks_exact(2))
+                    {
+                        *d = a[0] + a[1] + b[0] + b[1];
                     }
-                    next[y * next_res + x] = s;
+                    if full < next_res {
+                        dst[full] = row0[prev_res - 1] + row1[prev_res - 1];
+                    }
+                } else {
+                    // odd trailing source row: single-row reduction
+                    for (d, a) in dst[..full].iter_mut().zip(row0.chunks_exact(2)) {
+                        *d = a[0] + a[1];
+                    }
+                    if full < next_res {
+                        dst[full] = row0[prev_res - 1];
+                    }
                 }
             }
             levels.push(next);
             resolutions.push(next_res);
         }
-        Self { levels, resolutions }
+        let row_prefix = levels
+            .iter()
+            .zip(&resolutions)
+            .map(|(img, &res)| prefix_rows(img, res))
+            .collect();
+        Self { levels, resolutions, row_prefix }
     }
 
     pub fn num_levels(&self) -> usize {
@@ -114,10 +148,92 @@ impl Pyramid {
         (r.round() as u32).clamp(1, (res / 2.0) as u32)
     }
 
-    /// Total memory of all levels in bytes.
-    pub fn memory_bytes(&self) -> usize {
-        self.levels.iter().map(|l| l.len() * 4).sum()
+    /// Points in columns `[x0, x1]` (inclusive, level coordinates) of
+    /// row `y` at `level` — O(1) via the row prefix table.
+    pub fn row_span_count(&self, level: usize, y: usize, x0: usize, x1: usize) -> u32 {
+        let res = self.resolutions[level];
+        debug_assert!(y < res && x0 <= x1 && x1 < res);
+        let row = &self.row_prefix[level][y * (res + 1)..(y + 1) * (res + 1)];
+        row[x1 + 1] - row[x0]
     }
+
+    /// Upper bound on the points within radius `r` of the level-0
+    /// pixel `(cx, cy)`, computed from `O(r / 2^level)` coarse row
+    /// spans instead of `O(r)` fine ones.
+    ///
+    /// Soundness: every in-disk level-0 pixel lies in some scanned
+    /// coarse cell (the per-row half-span is evaluated at the row's
+    /// *closest* dy, which can only widen it), and a coarse cell's
+    /// count includes all of its base pixels — so the sum can only
+    /// over-count. At `level` 0 the bound degenerates to the exact
+    /// [`crate::active::scan::count_in_disk`].
+    pub fn count_in_disk_bound(
+        &self,
+        level: usize,
+        cx: u32,
+        cy: u32,
+        r: u32,
+        metric: Metric,
+    ) -> u64 {
+        let res = self.resolutions[level] as i64;
+        let scale = 1i64 << level;
+        let (cx, cy, r) = (cx as i64, cy as i64, r as i64);
+        let ys0 = (cy - r).max(0) >> level;
+        let ys1 = ((cy + r) >> level).min(res - 1);
+        let mut total = 0u64;
+        for ys in ys0..=ys1 {
+            // minimal |dy| from cy to any level-0 row this coarse row covers
+            let (lo, hi) = (ys * scale, (ys + 1) * scale - 1);
+            let dy_min = if cy < lo {
+                lo - cy
+            } else if cy > hi {
+                cy - hi
+            } else {
+                0
+            };
+            let Some(half) = half_span_wide(r, dy_min, metric) else { continue };
+            let xs0 = (cx - half).max(0) >> level;
+            let xs1 = ((cx + half) >> level).min(res - 1);
+            if xs0 > xs1 {
+                continue;
+            }
+            total += self.row_span_count(level, ys as usize, xs0 as usize, xs1 as usize) as u64;
+        }
+        total
+    }
+
+    /// Total memory of all levels (count images + row prefix tables).
+    pub fn memory_bytes(&self) -> usize {
+        let counts: usize = self.levels.iter().map(|l| l.len() * 4).sum();
+        let prefixes: usize = self.row_prefix.iter().map(|p| p.len() * 4).sum();
+        counts + prefixes
+    }
+}
+
+/// Row prefix table for one level image (see `Pyramid::row_prefix`).
+fn prefix_rows(img: &[u32], res: usize) -> Vec<u32> {
+    let mut table = vec![0u32; res * (res + 1)];
+    for (y, row) in img.chunks_exact(res).enumerate() {
+        let dst = &mut table[y * (res + 1)..(y + 1) * (res + 1)];
+        let mut acc = 0u32;
+        for (d, &v) in dst[1..].iter_mut().zip(row) {
+            acc += v;
+            *d = acc;
+        }
+    }
+    table
+}
+
+/// Widest x half-extent of the disk at row offset `dy` (same formula
+/// as the scanner's private `half_span`, on the bound's i64 domain).
+fn half_span_wide(r: i64, dy: i64, metric: Metric) -> Option<i64> {
+    if dy > r {
+        return None;
+    }
+    Some(match metric {
+        Metric::L2 => (((r * r - dy * dy) as f64).sqrt().floor()) as i64,
+        Metric::L1 => r - dy,
+    })
 }
 
 #[cfg(test)]
@@ -139,6 +255,63 @@ mod tests {
         for l in 0..p.num_levels() {
             let s: u64 = p.levels[l].iter().map(|&v| v as u64).sum();
             assert_eq!(s, n, "level {l}");
+        }
+    }
+
+    #[test]
+    fn odd_resolution_edge_rows_and_columns_preserved() {
+        // odd resolutions fold the trailing row/column into the last
+        // coarse cell; with floor division those edge points would
+        // silently vanish from every coarse level
+        let (g, p) = pyr(3000, 257);
+        let n = g.n_points() as u64;
+        for l in 0..p.num_levels() {
+            let s: u64 = p.levels[l].iter().map(|&v| v as u64).sum();
+            assert_eq!(s, n, "level {l} lost edge points");
+        }
+        // 257 → 129: the last coarse column covers exactly base column 256
+        let res1 = p.resolution(1);
+        assert_eq!(res1, 129);
+        let edge_col: u64 = (0..257u32).map(|y| g.count_at(256, y) as u64).sum();
+        let coarse_edge: u64 =
+            (0..res1).map(|y| p.levels[1][y * res1 + res1 - 1] as u64).sum();
+        assert_eq!(coarse_edge, edge_col);
+        // and the last coarse row covers exactly base row 256
+        let edge_row: u64 = (0..257u32).map(|x| g.count_at(x, 256) as u64).sum();
+        let coarse_row: u64 = p.levels[1][(res1 - 1) * res1..].iter().map(|&v| v as u64).sum();
+        assert_eq!(coarse_row, edge_row);
+    }
+
+    #[test]
+    fn row_span_count_matches_direct_sum() {
+        let (_, p) = pyr(2000, 200);
+        for level in 0..p.num_levels() {
+            let res = p.resolution(level);
+            for &(y, x0, x1) in &[(0, 0, res - 1), (res / 2, res / 3, res / 2), (res - 1, 0, 0)] {
+                let direct: u32 = p.levels[level][y * res + x0..=y * res + x1].iter().sum();
+                assert_eq!(p.row_span_count(level, y, x0, x1), direct, "level {level}");
+            }
+        }
+    }
+
+    #[test]
+    fn disk_bound_is_sound_and_exact_at_level0() {
+        use crate::active::scan;
+        let ds = generate(&SyntheticSpec::paper_default(3000, 13));
+        let g = MultiGrid::build(&ds, 257).unwrap();
+        let p = Pyramid::build(&g);
+        for &(cx, cy, r) in &[(128u32, 128u32, 20u32), (0, 0, 50), (256, 256, 9), (40, 200, 90)] {
+            for metric in [Metric::L2, Metric::L1] {
+                let exact = scan::count_in_disk(&g, cx, cy, r, metric);
+                for level in 0..p.num_levels() {
+                    let bound = p.count_in_disk_bound(level, cx, cy, r, metric);
+                    assert!(
+                        bound >= exact,
+                        "level {level} cx={cx} cy={cy} r={r} {metric:?}: {bound} < {exact}"
+                    );
+                }
+                assert_eq!(p.count_in_disk_bound(0, cx, cy, r, metric), exact);
+            }
         }
     }
 

@@ -14,7 +14,9 @@ use std::path::Path;
 use std::sync::Arc;
 
 use asnn::config::{AsnnConfig, EngineKind, Metric, R0Policy, SearchMode};
-use asnn::coordinator::{IoLimits, Metrics, ResiliencePolicy, Router, Server, Snapshotter};
+use asnn::coordinator::{
+    IoLimits, Metrics, ResiliencePolicy, Router, Server, Snapshotter, ThreadPool,
+};
 use asnn::data::synthetic::{generate, generate_queries, Family, SyntheticSpec};
 use asnn::data::{io as dio, Dataset};
 use asnn::engine::active::{ActiveEngine, ActiveParams};
@@ -142,6 +144,7 @@ fn active_params(cfg: &AsnnConfig) -> ActiveParams {
         mode: cfg.search.mode,
         r0_policy: cfg.search.r0_policy,
         tolerance: cfg.search.tolerance,
+        coarse_skip: false,
     }
 }
 
@@ -400,7 +403,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "built without the pjrt feature — PJRT engine disabled (artifacts dir: {})",
         artifacts.display()
     );
-    let server = Server::new(Arc::new(router), cfg.server.workers)
+    // dedicated pool for batch fan-out (NOT the connection pool: batch
+    // chunks queued behind connections would self-deadlock), then the
+    // batching lane so engine-less KNNs group into shared flights
+    router.set_batch_pool(Arc::new(ThreadPool::new(cfg.server.batch_workers)));
+    let router = Arc::new(router);
+    router.attach_batch_lane(
+        cfg.server.batch_max,
+        std::time::Duration::from_micros(cfg.server.batch_deadline_us),
+        (cfg.resilience.budget_ms > 0)
+            .then(|| std::time::Duration::from_millis(cfg.resilience.budget_ms)),
+    );
+    let server = Server::new(Arc::clone(&router), cfg.server.workers)
         .with_max_inflight(cfg.resilience.max_inflight)
         .with_drain_deadline(std::time::Duration::from_millis(
             cfg.resilience.drain_deadline_ms,

@@ -253,6 +253,7 @@ mod tests {
         let trace = SearchTrace {
             steps: vec![SearchStep { r: 30, n: 2 }, SearchStep { r: 50, n: 11 }],
             converged: true,
+            ..Default::default()
         };
         let c = render_trace(&grid, (100, 100), &trace, 0);
         // final circle r=50: pixel at (150, flip(100)) should be black

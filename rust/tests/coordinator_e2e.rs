@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use asnn::coordinator::batcher::Batcher;
 use asnn::coordinator::server::Client;
-use asnn::coordinator::{Metrics, Request, Response, Router, Server};
+use asnn::coordinator::{BatchEntry, Metrics, Request, Response, Router, Server, ThreadPool};
 use asnn::data::synthetic::{generate, generate_queries, SyntheticSpec};
 use asnn::engine::active::{ActiveEngine, ActiveParams};
 use asnn::engine::brute::BruteEngine;
@@ -123,6 +123,72 @@ fn batcher_feeds_batch_artifact_shape() {
     }
     assert_eq!(seen, 40);
     assert!(max_batch > 1, "no batching happened");
+}
+
+#[test]
+fn knnb_round_trips_over_tcp_with_batch_accounting() {
+    let mut router = full_router(4000, 506);
+    router.set_batch_pool(Arc::new(ThreadPool::new(2)));
+    let router = Arc::new(router);
+    let handle = Server::new(router.clone(), 2).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let queries: Vec<[f64; 2]> =
+        (0..5).map(|i| [0.1 + 0.15 * i as f64, 0.9 - 0.15 * i as f64]).collect();
+    let resp = c
+        .call(&Request::Knnb { k: 7, queries: queries.clone(), engine: Some("brute".into()) })
+        .unwrap();
+    let entries = match resp {
+        Response::Batch(entries) => entries,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(entries.len(), 5);
+    // each batch entry must match the same query asked individually
+    // (both sides round-trip the same wire formatting, so exact equality)
+    for (entry, q) in entries.iter().zip(&queries) {
+        let single = c
+            .call(&Request::Knn { k: 7, x: q[0], y: q[1], engine: Some("brute".into()) })
+            .unwrap();
+        match (entry, single) {
+            (BatchEntry::Hits(batch_hits), Response::Neighbors(hits)) => {
+                assert_eq!(batch_hits, &hits)
+            }
+            (e, s) => panic!("{e:?} vs {s:?}"),
+        }
+    }
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.batches, 1);
+    assert_eq!(snap.batched_queries, 5);
+    assert_eq!(snap.errors, 0);
+    handle.shutdown();
+}
+
+#[test]
+fn batching_lane_serves_concurrent_engine_less_knns() {
+    let router = Arc::new(full_router(4000, 507));
+    router.attach_batch_lane(8, Duration::from_millis(50), None);
+    let handle = Server::new(router.clone(), 4).spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+    let threads: Vec<_> = (0..6)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let x = 0.1 + 0.12 * t as f64;
+                match c.call(&Request::Knn { k: 5, x, y: 0.5, engine: None }).unwrap() {
+                    Response::Neighbors(hits) => assert!(!hits.is_empty() && hits.len() <= 5),
+                    other => panic!("thread {t}: {other:?}"),
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.knn_requests, 6);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.batches >= 1, "lane never flushed a batch");
+    assert_eq!(snap.batched_queries, 6);
+    handle.shutdown();
 }
 
 #[test]

@@ -7,13 +7,15 @@ use std::sync::Arc;
 
 use asnn::active::radius::{RadiusPolicy, Step};
 use asnn::active::scan;
-use asnn::config::Metric;
+use asnn::config::{Metric, SearchMode};
+use asnn::data::soa::{SoaMirror, BLOCK};
 use asnn::data::synthetic::{generate, SyntheticSpec};
 use asnn::data::Dataset;
+use asnn::engine::active::{ActiveEngine, ActiveParams};
 use asnn::engine::brute::BruteEngine;
 use asnn::engine::kdtree::KdTreeEngine;
 use asnn::engine::{NnEngine, TopK};
-use asnn::grid::MultiGrid;
+use asnn::grid::{MultiGrid, Pyramid};
 use asnn::util::rng::Rng;
 
 /// Property: fast row-span scan ≡ naive per-pixel scan, both metrics,
@@ -167,9 +169,9 @@ fn prop_pixel_mapping_total() {
 fn prop_protocol_parse_total() {
     use asnn::coordinator::{Request, Response};
     let tokens = [
-        "KNN", "CLASSIFY", "PING", "STATS", "HEALTH", "QUIT", "OK", "ERR", "1", "-3",
-        "0.5", "1e308", "-1e-308", "nan", "inf", "18446744073709551616", "x", "=", ";",
-        "\"", "\\", "\u{7f}", "🦀",
+        "KNN", "KNNB", "CLASSIFY", "PING", "STATS", "HEALTH", "QUIT", "OK", "ERR", "B",
+        "1", "-3", "0.5", "1e308", "-1e-308", "nan", "inf", "18446744073709551616", "x",
+        "=", ";", "\"", "\\", "\u{7f}", "🦀",
     ];
     let mut rng = Rng::new(609);
     for _ in 0..2000 {
@@ -191,6 +193,119 @@ fn prop_protocol_parse_total() {
         let text = String::from_utf8_lossy(&bytes);
         let _ = Request::parse(&text);
         let _ = Response::parse(&text);
+    }
+}
+
+/// Property: `knn_batch` ≡ sequential `knn` for any batch size, query
+/// order, and k — on both the exact brute engine and the active engine
+/// (whose batched path reuses per-thread scratch across queries, so
+/// this also proves the scratch is fully reset between queries).
+#[test]
+fn prop_knn_batch_matches_sequential() {
+    let mut rng = Rng::new(610);
+    for case in 0..25u64 {
+        let n = 50 + rng.below(400) as usize;
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(n, 611 + case)));
+        let brute = BruteEngine::new(ds.clone());
+        let mode = if case % 2 == 0 { SearchMode::Refined } else { SearchMode::Approx };
+        let active =
+            ActiveEngine::new(ds.clone(), 128, ActiveParams { mode, ..ActiveParams::default() })
+                .unwrap();
+        let b = 1 + rng.below(24) as usize;
+        let k = 1 + rng.below(10) as usize;
+        let queries: Vec<[f64; 2]> = (0..b).map(|_| [rng.next_f64(), rng.next_f64()]).collect();
+        let views: Vec<&[f64]> = queries.iter().map(|q| q.as_slice()).collect();
+        for engine in [&brute as &dyn NnEngine, &active] {
+            let batched = engine.knn_batch(&views, k);
+            assert_eq!(batched.len(), b, "case {case}");
+            for (i, (got, q)) in batched.into_iter().zip(&queries).enumerate() {
+                match (got, engine.knn(q, k)) {
+                    (Ok(g), Ok(w)) => assert_eq!(g, w, "case {case} query {i}"),
+                    (Err(g), Err(w)) => {
+                        assert_eq!(g.to_string(), w.to_string(), "case {case} query {i}")
+                    }
+                    (g, w) => panic!("case {case} query {i}: batched {g:?} vs single {w:?}"),
+                }
+            }
+        }
+    }
+}
+
+/// Property: the blocked SoA f32 distance kernel matches the f64
+/// scalar oracle within f32 tolerance, for arbitrary id subsets
+/// (sized to hit full and remainder blocks) and arbitrary queries;
+/// and a top-k selection over the f32 distances agrees with the f64
+/// top-k rank-by-rank on distance (ids may differ on near-ties).
+#[test]
+fn prop_soa_topk_matches_f64_oracle() {
+    let mut rng = Rng::new(612);
+    for case in 0..60u64 {
+        let n = 1 + rng.below(300) as usize;
+        let ds = generate(&SyntheticSpec::paper_default(n, 613 + case));
+        let soa = SoaMirror::build(&ds);
+        assert_eq!(soa.len(), n, "case {case}");
+        let q = [rng.next_f64(), rng.next_f64()];
+        let qf = [q[0] as f32, q[1] as f32];
+        let m = 1 + rng.below((n + BLOCK) as u64) as usize;
+        let ids: Vec<u32> = (0..m).map(|_| rng.below(n as u64) as u32).collect();
+        let mut dists = Vec::new();
+        soa.dist2_ids_into(&ids, &qf, &mut dists);
+        assert_eq!(dists.len(), ids.len(), "case {case}");
+        for (&id, &d32) in ids.iter().zip(&dists) {
+            let d64 = ds.dist2(id as usize, &q);
+            assert!(
+                (d32 as f64 - d64).abs() <= 1e-5 * (1.0 + d64),
+                "case {case}: id {id} f32 {d32} vs f64 {d64}"
+            );
+        }
+        // rank-by-rank top-k agreement on distance values
+        let k = 1 + rng.below(ids.len() as u64) as usize;
+        let mut by32: Vec<f32> = dists.clone();
+        by32.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut by64: Vec<f64> = ids.iter().map(|&id| ds.dist2(id as usize, &q)).collect();
+        by64.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for i in 0..k {
+            let d32 = by32[i] as f64;
+            let d64 = by64[i];
+            assert!(
+                (d32 - d64).abs() <= 1e-4 * (1.0 + d64),
+                "case {case} rank {i}: f32 {d32} vs f64 {d64}"
+            );
+        }
+    }
+}
+
+/// Property: pyramid coarse disk bounds are sound — an upper bound on
+/// the exact disk count at every level, and exact at level 0 — for
+/// random centers/radii, both metrics, odd and even resolutions.
+#[test]
+fn prop_pyramid_disk_bound_sound() {
+    let mut rng = Rng::new(614);
+    for (res, n, seed) in [(257usize, 2000usize, 615u64), (128, 1500, 616)] {
+        let ds = generate(&SyntheticSpec::paper_default(n, seed));
+        let g = MultiGrid::build(&ds, res).unwrap();
+        let p = Pyramid::build(&g);
+        for case in 0..150 {
+            let cx = rng.below(res as u64) as u32;
+            let cy = rng.below(res as u64) as u32;
+            let r = rng.below((res / 2) as u64) as u32;
+            for metric in [Metric::L2, Metric::L1] {
+                let exact = scan::count_in_disk(&g, cx, cy, r, metric);
+                for level in 0..p.num_levels() {
+                    let bound = p.count_in_disk_bound(level, cx, cy, r, metric);
+                    assert!(
+                        bound >= exact,
+                        "case {case} res={res} level={level} cx={cx} cy={cy} r={r} \
+                         {metric:?}: bound {bound} < exact {exact}"
+                    );
+                }
+                assert_eq!(
+                    p.count_in_disk_bound(0, cx, cy, r, metric),
+                    exact,
+                    "case {case} res={res} cx={cx} cy={cy} r={r} {metric:?}"
+                );
+            }
+        }
     }
 }
 
