@@ -70,4 +70,41 @@ fn main() {
         "expected shape: agreement rises then saturates with resolution; \
          memory grows ~quadratically; overlap falls."
     );
+
+    // ABL-SKIP — does the coarse-to-fine radius fast-forward pay for
+    // itself? Same data/queries, coarse_skip toggled per resolution.
+    // Accuracy should match by construction (the fast-forward only
+    // skips radii a pyramid upper bound proves under-filled), so the
+    // interesting column is mean_query_us. Results + the default
+    // decision live in docs/PERFORMANCE.md.
+    let mut skip_table = Table::new(
+        "ABL-SKIP coarse_skip on/off (N=30k, k=11)",
+        &["resolution", "coarse_skip", "agreement_pct", "mean_query_us", "mean_iters"],
+    );
+    for &res in &[512usize, 1024, 2048, 3000, 4096] {
+        for &skip in &[false, true] {
+            let params = ActiveParams { coarse_skip: skip, ..ActiveParams::default() };
+            let engine = ActiveEngine::new(data.clone(), res, params).unwrap();
+            let t = Timer::new();
+            let mut agree = 0usize;
+            let mut iters = 0u64;
+            for (q, want) in queries.iter().zip(&truth) {
+                if engine.classify(q, K).unwrap() == *want {
+                    agree += 1;
+                }
+                let (_, st) = engine.knn_stats(q, K).unwrap();
+                iters += st.iterations as u64;
+            }
+            let secs = t.elapsed_secs();
+            skip_table.row(&[
+                res.to_string(),
+                skip.to_string(),
+                format!("{:.1}", 100.0 * agree as f64 / QUERIES as f64),
+                format!("{:.1}", secs * 1e6 / (2 * QUERIES) as f64),
+                format!("{:.1}", iters as f64 / QUERIES as f64),
+            ]);
+            eprintln!("res={res} coarse_skip={skip} done");
+        }
+    }
+    skip_table.print();
 }

@@ -1,0 +1,60 @@
+//! Minimal end-to-end serving demo, also used by CI's STATS2 schema
+//! check: boots a tiny stack (brute + active with a shared
+//! observability recorder), serves a handful of KNN queries and a
+//! TRACE over real TCP, then prints the `STATS2 json` document —
+//! and nothing else — to stdout so a schema assertion can parse it.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use std::sync::Arc;
+
+use asnn::coordinator::server::Client;
+use asnn::coordinator::{Metrics, Request, Response, Router, Server, StatsFormat};
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+use asnn::obs::Recorder;
+
+fn main() {
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(2000, 7)));
+
+    // the demo mirrors cmd_serve's wiring: one recorder shared by the
+    // active engine (stage spans) and the router (engine counters)
+    let recorder = Arc::new(Recorder::new());
+    let mut active = ActiveEngine::new(ds.clone(), 256, ActiveParams::default()).unwrap();
+    active.set_recorder(Arc::clone(&recorder));
+
+    let mut router = Router::new("active", Arc::new(Metrics::new()));
+    router.set_recorder(recorder);
+    router.register_engine(Arc::new(BruteEngine::new(ds.clone())));
+    router.register_engine(Arc::new(active));
+
+    let handle = Server::new(Arc::new(router), 2).spawn("127.0.0.1:0").unwrap();
+    eprintln!("serve_demo: listening on {}", handle.addr);
+
+    let mut c = Client::connect(&handle.addr).unwrap();
+    for (x, y) in [(0.2, 0.3), (0.5, 0.5), (0.8, 0.4), (0.3, 0.7)] {
+        match c.call(&Request::Knn { k: 11, x, y, engine: None }).unwrap() {
+            Response::Neighbors(hits) => {
+                eprintln!("serve_demo: knn ({x},{y}) -> {} hits", hits.len())
+            }
+            other => panic!("unexpected KNN response: {other:?}"),
+        }
+    }
+    match c
+        .call(&Request::Trace { k: 5, x: 0.5, y: 0.5, engine: Some("active".into()) })
+        .unwrap()
+    {
+        Response::Text(t) => eprintln!("serve_demo: trace {t}"),
+        other => panic!("unexpected TRACE response: {other:?}"),
+    }
+
+    // stdout carries exactly the STATS2 JSON document
+    match c.call(&Request::Stats2 { format: StatsFormat::Json, section: None }).unwrap() {
+        Response::Text(json) => println!("{json}"),
+        other => panic!("unexpected STATS2 response: {other:?}"),
+    }
+
+    drop(c);
+    handle.shutdown();
+}

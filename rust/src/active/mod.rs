@@ -11,34 +11,7 @@ pub mod radius;
 pub mod scan;
 pub mod window;
 
-/// One step of an active search, recorded for traces and Fig. 2.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct SearchStep {
-    /// Radius used this iteration (pixels).
-    pub r: u32,
-    /// Points counted inside the circle.
-    pub n: u64,
-}
-
-/// Full trace of an active search (for Fig. 2 and diagnostics).
-#[derive(Debug, Clone, Default)]
-pub struct SearchTrace {
-    pub steps: Vec<SearchStep>,
-    /// True if the loop ended by |n−k| ≤ tolerance, false if it hit the
-    /// max-iteration guard or the radius cap.
-    pub converged: bool,
-    /// Radius growth steps resolved from pyramid upper bounds alone —
-    /// coarse-to-fine skips that never paid for an exact disk scan, so
-    /// they appear in neither `steps` nor the work accounting.
-    pub coarse_skips: u32,
-}
-
-impl SearchTrace {
-    pub fn iterations(&self) -> usize {
-        self.steps.len()
-    }
-
-    pub fn final_radius(&self) -> Option<u32> {
-        self.steps.last().map(|s| s.r)
-    }
-}
+// The search trace began life here as a debug struct; it is now the
+// crate-wide stable trace record (see `crate::obs::trace`). Re-exported
+// so paper-level code keeps reading `active::SearchTrace`.
+pub use crate::obs::trace::{SearchStep, SearchTrace};

@@ -135,6 +135,10 @@ pub struct SearchConfig {
     /// Accept |n_t − k| ≤ tolerance instead of exact equality (the paper
     /// requires n_t == k; tolerance 0 reproduces that).
     pub tolerance: u32,
+    /// Skip the coarse candidate-count pass when the window is small
+    /// enough to scan directly (see `docs/PERFORMANCE.md` for the
+    /// ablation; off by default).
+    pub coarse_skip: bool,
 }
 
 /// `[server]` section.
@@ -206,6 +210,20 @@ pub struct ResilienceConfig {
     pub max_line_bytes: usize,
 }
 
+/// `[obs]` section — observability layer (see `crate::obs` and
+/// `docs/OBSERVABILITY.md`).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Whether the serving stack attaches a shared recorder (per-stage
+    /// histograms, per-engine counters, STATS2/TRACE support data).
+    /// Disabling leaves the verbs functional but empty of stage data.
+    pub enabled: bool,
+    /// Period between observability snapshot exports to the `[store]`
+    /// directory in milliseconds; 0 disables periodic export (boot
+    /// restore of a previous export still runs).
+    pub export_interval_ms: u64,
+}
+
 /// `[store]` section — crash-safe snapshot persistence
 /// (see `crate::store`).
 #[derive(Debug, Clone)]
@@ -232,6 +250,7 @@ pub struct AsnnConfig {
     pub runtime: RuntimeConfig,
     pub resilience: ResilienceConfig,
     pub store: StoreConfig,
+    pub obs: ObsConfig,
 }
 
 impl Default for AsnnConfig {
@@ -253,6 +272,7 @@ impl Default for AsnnConfig {
                 mode: SearchMode::Refined,
                 r0_policy: R0Policy::Fixed,
                 tolerance: 0,
+                coarse_skip: false,
             },
             engine: EngineKind::Active,
             server: ServerConfig {
@@ -288,6 +308,7 @@ impl Default for AsnnConfig {
                 snapshot_interval_ms: 60_000,
                 keep: 3,
             },
+            obs: ObsConfig { enabled: true, export_interval_ms: 10_000 },
         }
     }
 }
@@ -323,6 +344,8 @@ impl AsnnConfig {
             doc.int_or("search", "max_iters", cfg.search.max_iters as i64) as u32;
         cfg.search.tolerance =
             doc.int_or("search", "tolerance", cfg.search.tolerance as i64) as u32;
+        cfg.search.coarse_skip =
+            doc.bool_or("search", "coarse_skip", cfg.search.coarse_skip);
         let metric = doc.str_or("search", "metric", cfg.search.metric.name());
         cfg.search.metric = Metric::parse(&metric)
             .ok_or_else(|| AsnnError::Config(format!("unknown search.metric {metric:?}")))?;
@@ -416,6 +439,13 @@ impl AsnnConfig {
             cfg.store.snapshot_interval_ms as i64,
         ) as u64;
         cfg.store.keep = doc.int_or("store", "keep", cfg.store.keep as i64) as usize;
+
+        cfg.obs.enabled = doc.bool_or("obs", "enabled", cfg.obs.enabled);
+        cfg.obs.export_interval_ms = doc.int_or(
+            "obs",
+            "export_interval_ms",
+            cfg.obs.export_interval_ms as i64,
+        ) as u64;
 
         cfg.runtime.artifacts_dir =
             doc.str_or("runtime", "artifacts_dir", &cfg.runtime.artifacts_dir);
@@ -642,6 +672,29 @@ mod tests {
         assert_eq!(c.resilience.probe_successes, 3);
         assert_eq!(c.resilience.drain_deadline_ms, 750);
         assert!(!c.resilience.fallback);
+    }
+
+    #[test]
+    fn obs_and_coarse_skip_defaults_and_overrides() {
+        let c = AsnnConfig::default();
+        assert!(!c.search.coarse_skip); // off pending the ablation verdict
+        assert!(c.obs.enabled);
+        assert_eq!(c.obs.export_interval_ms, 10_000);
+        c.validate().unwrap();
+
+        let c = AsnnConfig::from_toml(
+            r#"
+            [search]
+            coarse_skip = true
+            [obs]
+            enabled = false
+            export_interval_ms = 0
+            "#,
+        )
+        .unwrap();
+        assert!(c.search.coarse_skip);
+        assert!(!c.obs.enabled);
+        assert_eq!(c.obs.export_interval_ms, 0); // periodic export off
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::obs::Json;
 use crate::util::stats::LatencyHistogram;
 
 /// Shared metrics sink (cheap atomics on the hot path; the histogram
@@ -263,7 +264,12 @@ impl Metrics {
 }
 
 impl MetricsSnapshot {
-    /// One-line rendering for the STATS verb.
+    /// One-line rendering for the legacy STATS verb.
+    ///
+    /// FROZEN: this byte format is a compatibility contract. Scripts
+    /// parse it field-by-field; never reorder, rename, or reformat
+    /// existing fields (`stats_render_format_is_frozen` pins it).
+    /// New telemetry goes in [`to_json`](Self::to_json) / `STATS2`.
     pub fn render(&self) -> String {
         format!(
             "knn={} classify={} errors={} batches={} batched={} \
@@ -303,6 +309,44 @@ impl MetricsSnapshot {
             self.classify_mean_us,
             self.classify_p99_us,
         )
+    }
+
+    /// Structured rendering for the `STATS2` coordinator section.
+    /// Same counters as [`render`](Self::render), key-typed instead of
+    /// packed into one line; safe to extend with new keys.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("knn_requests", Json::num_u64(self.knn_requests)),
+            ("classify_requests", Json::num_u64(self.classify_requests)),
+            ("errors", Json::num_u64(self.errors)),
+            ("batches", Json::num_u64(self.batches)),
+            ("batched_queries", Json::num_u64(self.batched_queries)),
+            ("expired_dropped", Json::num_u64(self.expired_dropped)),
+            ("accept_errors", Json::num_u64(self.accept_errors)),
+            ("shed", Json::num_u64(self.shed)),
+            ("timeouts", Json::num_u64(self.timeouts)),
+            ("retries", Json::num_u64(self.retries)),
+            ("breaker_trips", Json::num_u64(self.breaker_trips)),
+            ("fallbacks", Json::num_u64(self.fallbacks)),
+            ("panics", Json::num_u64(self.panics)),
+            ("hedges", Json::num_u64(self.hedges)),
+            ("hedge_wins", Json::num_u64(self.hedge_wins)),
+            ("budget_exhausted", Json::num_u64(self.budget_exhausted)),
+            ("oversize_rejected", Json::num_u64(self.oversize_rejected)),
+            ("idle_disconnects", Json::num_u64(self.idle_disconnects)),
+            (
+                "write_timeout_disconnects",
+                Json::num_u64(self.write_timeout_disconnects),
+            ),
+            ("corrupt_quarantined", Json::num_u64(self.corrupt_quarantined)),
+            ("snapshots", Json::num_u64(self.snapshots)),
+            ("snapshot_failures", Json::num_u64(self.snapshot_failures)),
+            ("knn_mean_us", Json::Num(self.knn_mean_us)),
+            ("knn_p50_us", Json::Num(self.knn_p50_us)),
+            ("knn_p99_us", Json::Num(self.knn_p99_us)),
+            ("classify_mean_us", Json::Num(self.classify_mean_us)),
+            ("classify_p99_us", Json::Num(self.classify_p99_us)),
+        ])
     }
 }
 
@@ -440,6 +484,65 @@ mod tests {
         assert!(m.is_draining());
         m.set_draining(false);
         assert!(!m.is_draining());
+    }
+
+    #[test]
+    fn stats_render_format_is_frozen() {
+        // byte-for-byte pin of the legacy STATS line — the shim
+        // contract promised by docs/OBSERVABILITY.md. If this test
+        // fails you have broken every script that parses STATS.
+        let m = Metrics::new();
+        m.record_knn(2_000); // 2 µs
+        m.record_classify(4_000);
+        m.record_error();
+        m.record_batch(3);
+        let line = m.snapshot().render();
+        let expected = "knn=1 classify=1 errors=1 batches=1 batched=3 \
+                        expired_dropped=0 \
+                        accept_errors=0 shed=0 timeouts=0 retries=0 trips=0 \
+                        fallbacks=0 panics=0 hedges=0 hedge_wins=0 \
+                        budget_exhausted=0 \
+                        oversize_rejected=0 idle_disconnects=0 write_timeout_disconnects=0 \
+                        corrupt_quarantined=0 snapshots=0 snapshot_failures=0";
+        assert!(line.starts_with(expected), "prefix diverged:\n{line}");
+        // latency fields depend on histogram bucket edges — pin shape,
+        // not values
+        let tail: Vec<&str> = line[expected.len()..].split_whitespace().collect();
+        let keys: Vec<&str> =
+            tail.iter().map(|f| f.split_once('=').map(|(k, _)| k).unwrap_or(f)).collect();
+        assert_eq!(
+            keys,
+            [
+                "knn_mean_us",
+                "knn_p50_us",
+                "knn_p99_us",
+                "classify_mean_us",
+                "classify_p99_us"
+            ],
+            "{line}"
+        );
+        for f in &tail {
+            let v = f.split_once('=').unwrap().1;
+            assert!(v.parse::<f64>().is_ok(), "{f}");
+            assert!(v.contains('.'), "{{:.1}} formatting changed: {f}");
+        }
+    }
+
+    #[test]
+    fn to_json_mirrors_render_counters() {
+        let m = Metrics::new();
+        m.record_knn(1_000);
+        m.record_retry();
+        m.record_retry();
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("knn_requests").and_then(Json::as_u64), Some(1));
+        assert_eq!(j.get("retries").and_then(Json::as_u64), Some(2));
+        assert_eq!(j.get("shed").and_then(Json::as_u64), Some(0));
+        assert!(j.get("knn_p99_us").and_then(Json::as_f64).is_some());
+        // structured output survives the wire
+        let rendered = j.render();
+        let back = Json::parse(&rendered).unwrap();
+        assert_eq!(back.get("retries").and_then(Json::as_u64), Some(2));
     }
 
     #[test]

@@ -61,9 +61,9 @@ pub mod snapshotter;
 pub mod worker;
 
 pub use metrics::Metrics;
-pub use protocol::{BatchEntry, Request, Response};
+pub use protocol::{BatchEntry, ErrCode, Request, Response, StatsFormat, StatsSection};
 pub use resilience::{Budget, CircuitBreaker, ResiliencePolicy};
 pub use router::Router;
 pub use server::{IoLimits, Server};
-pub use snapshotter::Snapshotter;
+pub use snapshotter::{SnapshotSource, Snapshotter};
 pub use worker::ThreadPool;

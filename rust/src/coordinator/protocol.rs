@@ -6,7 +6,9 @@
 //! KNNB <k> <n> <x1> <y1> ... <xn> <yn> [engine]
 //!                                 → OK B <n> ; <entry> ; ... ; <entry>
 //! CLASSIFY <k> <x> <y> [engine]   → OK <label>
-//! STATS                           → OK <metrics text, one line>
+//! STATS                           → OK <metrics text, one line — frozen legacy format>
+//! STATS2 [json|text] [section]    → OK <structured telemetry document>
+//! TRACE <x> <y> <k> [engine]      → OK <one query's span tree, JSON>
 //! HEALTH                          → OK status=... engines=... breakers=... queue_depth=N
 //! PING                            → OK pong
 //! QUIT                            → closes the connection
@@ -17,12 +19,157 @@
 //!
 //! `KNNB` answers one batch in one line: entry `i` belongs to query
 //! `i` and is either a space-joined run of `id:dist:label` triplets
-//! (possibly empty) or `!<domain> <message>` for a per-query failure —
+//! (possibly empty) or `!<code> <message>` for a per-query failure —
 //! one bad query never poisons its batchmates.
-//! Errors: `ERR <domain> <message>`.
+//!
+//! `STATS2` is the versioned telemetry verb (`docs/OBSERVABILITY.md`):
+//! format defaults to `json`; `section` narrows the document to
+//! `stages`, `engines`, or `coordinator`. The legacy one-line `STATS`
+//! is a frozen compatibility shim — its byte format never changes.
+//!
+//! Errors: `ERR <code> <detail>`, where `<code>` is one of the stable
+//! [`ErrCode`] names shared by the single and batched paths (the same
+//! codes appear after `!` in batch entries). Codes are documented in
+//! `docs/RESILIENCE.md`.
 
 use crate::engine::Neighbor;
 use crate::error::{AsnnError, Result};
+
+/// Stable machine-readable error code carried by `ERR <code> <detail>`
+/// lines and `!<code> <message>` batch entries.
+///
+/// The wire names are frozen: they are exactly the [`AsnnError::tag`]
+/// domains plus the server's `too-long` I/O rejection, and `unknown`
+/// for codes a newer server might emit that this client predates.
+/// Adding a variant is backward-compatible; renaming one is a breaking
+/// protocol change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrCode {
+    Config,
+    Data,
+    Grid,
+    Query,
+    Runtime,
+    Coordinator,
+    Protocol,
+    Overload,
+    Timeout,
+    Store,
+    Io,
+    /// Request line exceeded the server's line-length limit.
+    TooLong,
+    /// Unrecognized code from a foreign/newer peer (parse-side only).
+    Unknown,
+}
+
+impl ErrCode {
+    /// Every concrete code (excludes the parse-side `Unknown` catchall).
+    pub const ALL: [ErrCode; 12] = [
+        ErrCode::Config,
+        ErrCode::Data,
+        ErrCode::Grid,
+        ErrCode::Query,
+        ErrCode::Runtime,
+        ErrCode::Coordinator,
+        ErrCode::Protocol,
+        ErrCode::Overload,
+        ErrCode::Timeout,
+        ErrCode::Store,
+        ErrCode::Io,
+        ErrCode::TooLong,
+    ];
+
+    /// The frozen wire name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrCode::Config => "config",
+            ErrCode::Data => "data",
+            ErrCode::Grid => "grid",
+            ErrCode::Query => "query",
+            ErrCode::Runtime => "runtime",
+            ErrCode::Coordinator => "coordinator",
+            ErrCode::Protocol => "protocol",
+            ErrCode::Overload => "overload",
+            ErrCode::Timeout => "timeout",
+            ErrCode::Store => "store",
+            ErrCode::Io => "io",
+            ErrCode::TooLong => "too-long",
+            ErrCode::Unknown => "unknown",
+        }
+    }
+
+    /// Parse a wire name; `None` for anything unrecognized.
+    pub fn parse(s: &str) -> Option<ErrCode> {
+        ErrCode::ALL.into_iter().find(|c| c.as_str() == s)
+    }
+
+    /// Lossy parse for the client side: unrecognized names collapse to
+    /// [`ErrCode::Unknown`] so response parsing stays total.
+    pub fn parse_lossy(s: &str) -> ErrCode {
+        ErrCode::parse(s).unwrap_or(ErrCode::Unknown)
+    }
+}
+
+impl From<&AsnnError> for ErrCode {
+    fn from(e: &AsnnError) -> ErrCode {
+        // tag() is the single source of truth for error→code naming;
+        // every tag has a matching variant (enforced by test below).
+        ErrCode::parse_lossy(e.tag())
+    }
+}
+
+impl std::fmt::Display for ErrCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Output format selector for `STATS2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsFormat {
+    Json,
+    Text,
+}
+
+impl StatsFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StatsFormat::Json => "json",
+            StatsFormat::Text => "text",
+        }
+    }
+}
+
+/// Section selector for `STATS2` (omitted = the full document).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsSection {
+    /// Per-stage latency histograms (coarse/refine/scan/retry/hedge/
+    /// batch_wait).
+    Stages,
+    /// Per-engine request/error/batch counters and latency.
+    Engines,
+    /// Coordinator counters (the structured form of legacy `STATS`).
+    Coordinator,
+}
+
+impl StatsSection {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StatsSection::Stages => "stages",
+            StatsSection::Engines => "engines",
+            StatsSection::Coordinator => "coordinator",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StatsSection> {
+        match s {
+            "stages" => Some(StatsSection::Stages),
+            "engines" => Some(StatsSection::Engines),
+            "coordinator" => Some(StatsSection::Coordinator),
+            _ => None,
+        }
+    }
+}
 
 /// Largest accepted `KNNB` batch. Checked before any allocation so a
 /// hostile header cannot reserve unbounded memory.
@@ -35,6 +182,8 @@ pub enum Request {
     Knnb { k: usize, queries: Vec<[f64; 2]>, engine: Option<String> },
     Classify { k: usize, x: f64, y: f64, engine: Option<String> },
     Stats,
+    Stats2 { format: StatsFormat, section: Option<StatsSection> },
+    Trace { k: usize, x: f64, y: f64, engine: Option<String> },
     Health,
     Ping,
     Quit,
@@ -113,6 +262,54 @@ impl Request {
                 Ok(Request::Classify { k, x, y, engine })
             }
             "STATS" => Ok(Request::Stats),
+            "STATS2" => {
+                let format = match it.next() {
+                    None => StatsFormat::Json,
+                    Some(f) => match f.to_ascii_lowercase().as_str() {
+                        "json" => StatsFormat::Json,
+                        "text" => StatsFormat::Text,
+                        other => {
+                            return Err(AsnnError::Protocol(format!(
+                                "bad STATS2 format {other:?} (want json|text)"
+                            )))
+                        }
+                    },
+                };
+                let section = match it.next() {
+                    None => None,
+                    Some(s) => Some(StatsSection::parse(&s.to_ascii_lowercase()).ok_or_else(
+                        || {
+                            AsnnError::Protocol(format!(
+                                "bad STATS2 section {s:?} (want stages|engines|coordinator)"
+                            ))
+                        },
+                    )?),
+                };
+                if it.next().is_some() {
+                    return Err(AsnnError::Protocol("trailing tokens after STATS2".into()));
+                }
+                Ok(Request::Stats2 { format, section })
+            }
+            "TRACE" => {
+                let coord = |it: &mut dyn Iterator<Item = &str>, what: &str| -> Result<f64> {
+                    it.next()
+                        .ok_or_else(|| AsnnError::Protocol(format!("missing {what}")))?
+                        .parse()
+                        .map_err(|_| AsnnError::Protocol(format!("bad {what}")))
+                };
+                let x = coord(&mut it, "x")?;
+                let y = coord(&mut it, "y")?;
+                let k: usize = it
+                    .next()
+                    .ok_or_else(|| AsnnError::Protocol("missing k".into()))?
+                    .parse()
+                    .map_err(|_| AsnnError::Protocol("bad k".into()))?;
+                let engine = it.next().map(|s| s.to_string());
+                if it.next().is_some() {
+                    return Err(AsnnError::Protocol("trailing tokens after TRACE".into()));
+                }
+                Ok(Request::Trace { k, x, y, engine })
+            }
             "HEALTH" => Ok(Request::Health),
             "PING" => Ok(Request::Ping),
             "QUIT" => Ok(Request::Quit),
@@ -143,6 +340,14 @@ impl Request {
                 None => format!("CLASSIFY {k} {x} {y}"),
             },
             Request::Stats => "STATS".into(),
+            Request::Stats2 { format, section } => match section {
+                Some(s) => format!("STATS2 {} {}", format.as_str(), s.as_str()),
+                None => format!("STATS2 {}", format.as_str()),
+            },
+            Request::Trace { k, x, y, engine } => match engine {
+                Some(e) => format!("TRACE {x} {y} {k} {e}"),
+                None => format!("TRACE {x} {y} {k}"),
+            },
             Request::Health => "HEALTH".into(),
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),
@@ -156,7 +361,7 @@ pub enum BatchEntry {
     /// This query's neighbors (possibly empty).
     Hits(Vec<Neighbor>),
     /// This query failed; its batchmates are unaffected.
-    Error { domain: String, message: String },
+    Error { code: ErrCode, message: String },
 }
 
 /// A server response.
@@ -166,7 +371,7 @@ pub enum Response {
     Label(u16),
     Batch(Vec<BatchEntry>),
     Text(String),
-    Error { domain: String, message: String },
+    Error { code: ErrCode, message: String },
 }
 
 impl Response {
@@ -189,18 +394,18 @@ impl Response {
                             .map(|n| format!("{}:{:.6}:{}", n.id, n.dist, n.label))
                             .collect::<Vec<String>>()
                             .join(" "),
-                        BatchEntry::Error { domain, message } => {
+                        BatchEntry::Error { code, message } => {
                             // the entry separator and newline must never
                             // appear inside a message
-                            format!("!{domain} {}", message.replace([';', '\n'], " "))
+                            format!("!{code} {}", message.replace([';', '\n'], " "))
                         }
                     })
                     .collect();
                 format!("OK B {} ; {}", entries.len(), body.join(" ; "))
             }
             Response::Text(t) => format!("OK {}", t.replace('\n', " | ")),
-            Response::Error { domain, message } => {
-                format!("ERR {domain} {}", message.replace('\n', " "))
+            Response::Error { code, message } => {
+                format!("ERR {code} {}", message.replace('\n', " "))
             }
         }
     }
@@ -208,8 +413,11 @@ impl Response {
     /// Parse a response line (client side).
     pub fn parse(line: &str) -> Result<Response> {
         if let Some(rest) = line.strip_prefix("ERR ") {
-            let (domain, message) = rest.split_once(' ').unwrap_or((rest, ""));
-            return Ok(Response::Error { domain: domain.into(), message: message.into() });
+            let (code, message) = rest.split_once(' ').unwrap_or((rest, ""));
+            return Ok(Response::Error {
+                code: ErrCode::parse_lossy(code),
+                message: message.into(),
+            });
         }
         let Some(rest) = line.strip_prefix("OK") else {
             return Err(AsnnError::Protocol(format!("bad response line {line:?}")));
@@ -249,7 +457,7 @@ impl Response {
     }
 
     pub fn from_error(e: &AsnnError) -> Response {
-        Response::Error { domain: e.tag().into(), message: e.to_string() }
+        Response::Error { code: ErrCode::from(e), message: e.to_string() }
     }
 
     /// Parse the batched `B <n> ; <entry> ; ...` body after `OK `.
@@ -270,9 +478,9 @@ impl Response {
         for chunk in chunks {
             let chunk = chunk.trim();
             if let Some(err) = chunk.strip_prefix('!') {
-                let (domain, message) = err.split_once(' ').unwrap_or((err, ""));
+                let (code, message) = err.split_once(' ').unwrap_or((err, ""));
                 entries.push(BatchEntry::Error {
-                    domain: domain.into(),
+                    code: ErrCode::parse_lossy(code),
                     message: message.into(),
                 });
                 continue;
@@ -350,7 +558,7 @@ mod tests {
                 Neighbor { id: 9, dist: 0.5, label: 0 },
             ]),
             BatchEntry::Hits(vec![]), // a query with zero hits
-            BatchEntry::Error { domain: "query".into(), message: "k = 0 out of range".into() },
+            BatchEntry::Error { code: ErrCode::Query, message: "k = 0 out of range".into() },
         ]);
         let line = resp.format();
         assert!(!line.contains('\n'));
@@ -367,8 +575,8 @@ mod tests {
                 }
                 assert_eq!(entries[1], BatchEntry::Hits(vec![]));
                 match &entries[2] {
-                    BatchEntry::Error { domain, message } => {
-                        assert_eq!(domain, "query");
+                    BatchEntry::Error { code, message } => {
+                        assert_eq!(*code, ErrCode::Query);
                         assert!(message.contains("k = 0"));
                     }
                     other => panic!("{other:?}"),
@@ -381,7 +589,7 @@ mod tests {
     #[test]
     fn batch_error_messages_cannot_forge_the_entry_separator() {
         let resp = Response::Batch(vec![
-            BatchEntry::Error { domain: "query".into(), message: "evil ; 1:0.5:0 ; x\n".into() },
+            BatchEntry::Error { code: ErrCode::Query, message: "evil ; 1:0.5:0 ; x\n".into() },
             BatchEntry::Hits(vec![Neighbor { id: 1, dist: 1.0, label: 0 }]),
         ]);
         match Response::parse(&resp.format()).unwrap() {
@@ -457,12 +665,111 @@ mod tests {
     fn error_response_roundtrip() {
         let e = AsnnError::Query("k too large".into());
         let line = Response::from_error(&e).format();
+        assert!(line.starts_with("ERR query "));
         match Response::parse(&line).unwrap() {
-            Response::Error { domain, message } => {
-                assert_eq!(domain, "query");
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrCode::Query);
                 assert!(message.contains("k too large"));
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn err_code_covers_every_error_tag() {
+        // every AsnnError maps onto a real variant, never Unknown
+        let samples = [
+            AsnnError::Config("c".into()),
+            AsnnError::Data("d".into()),
+            AsnnError::Grid("g".into()),
+            AsnnError::Query("q".into()),
+            AsnnError::Runtime("r".into()),
+            AsnnError::Coordinator("co".into()),
+            AsnnError::Protocol("p".into()),
+            AsnnError::Overloaded("o".into()),
+            AsnnError::Timeout("t".into()),
+            AsnnError::Store("s".into()),
+            AsnnError::Io(std::io::Error::other("disk on fire")),
+        ];
+        for e in &samples {
+            let code = ErrCode::from(e);
+            assert_ne!(code, ErrCode::Unknown, "tag {:?} has no ErrCode", e.tag());
+            assert_eq!(code.as_str(), e.tag());
+        }
+    }
+
+    #[test]
+    fn err_code_wire_names_roundtrip() {
+        for code in ErrCode::ALL {
+            assert_eq!(ErrCode::parse(code.as_str()), Some(code));
+            assert_eq!(ErrCode::parse_lossy(code.as_str()), code);
+            assert_eq!(format!("{code}"), code.as_str());
+        }
+        assert_eq!(ErrCode::parse("too-long"), Some(ErrCode::TooLong));
+        assert_eq!(ErrCode::parse("no-such-code"), None);
+        assert_eq!(ErrCode::parse_lossy("no-such-code"), ErrCode::Unknown);
+    }
+
+    #[test]
+    fn foreign_err_codes_parse_as_unknown_not_error() {
+        // a newer server may emit codes this client doesn't know —
+        // parsing must stay total
+        match Response::parse("ERR shiny-new-code something broke").unwrap() {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrCode::Unknown);
+                assert_eq!(message, "something broke");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats2_parse_defaults_and_roundtrip() {
+        let r = Request::parse("STATS2").unwrap();
+        assert_eq!(r, Request::Stats2 { format: StatsFormat::Json, section: None });
+        assert_eq!(Request::parse(&r.format()).unwrap(), r);
+
+        let r = Request::parse("stats2 text engines").unwrap();
+        assert_eq!(
+            r,
+            Request::Stats2 {
+                format: StatsFormat::Text,
+                section: Some(StatsSection::Engines),
+            }
+        );
+        assert_eq!(Request::parse(&r.format()).unwrap(), r);
+
+        for section in ["stages", "engines", "coordinator"] {
+            let r = Request::parse(&format!("STATS2 json {section}")).unwrap();
+            assert_eq!(Request::parse(&r.format()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn stats2_rejects_unknown_format_and_section() {
+        assert!(Request::parse("STATS2 xml").is_err());
+        assert!(Request::parse("STATS2 json nope").is_err());
+        assert!(Request::parse("STATS2 json stages extra").is_err());
+    }
+
+    #[test]
+    fn trace_parse_and_roundtrip() {
+        let r = Request::parse("TRACE 0.25 0.75 11").unwrap();
+        assert_eq!(r, Request::Trace { k: 11, x: 0.25, y: 0.75, engine: None });
+        assert_eq!(Request::parse(&r.format()).unwrap(), r);
+
+        let r = Request::parse("trace 0.5 0.5 3 active").unwrap();
+        assert_eq!(r, Request::Trace { k: 3, x: 0.5, y: 0.5, engine: Some("active".into()) });
+        assert_eq!(Request::parse(&r.format()).unwrap(), r);
+    }
+
+    #[test]
+    fn trace_rejects_malformed() {
+        assert!(Request::parse("TRACE").is_err());
+        assert!(Request::parse("TRACE 0.5").is_err());
+        assert!(Request::parse("TRACE 0.5 0.5").is_err());
+        assert!(Request::parse("TRACE 0.5 0.5 nope").is_err());
+        assert!(Request::parse("TRACE x 0.5 3").is_err());
+        assert!(Request::parse("TRACE 0.5 0.5 3 active extra").is_err());
     }
 }

@@ -43,13 +43,14 @@ use std::time::Duration;
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
-use super::protocol::{BatchEntry, Request, Response};
+use super::protocol::{BatchEntry, ErrCode, Request, Response, StatsFormat, StatsSection};
 use super::resilience::{
     is_client_error, is_retryable, Budget, CircuitBreaker, ResiliencePolicy,
 };
 use super::worker::ThreadPool;
 use crate::engine::{Neighbor, NnEngine};
 use crate::error::{AsnnError, Result};
+use crate::obs::{Json, QueryTrace, Recorder, Stage};
 use crate::util::timer::Timer;
 
 /// Default degradation order: most specialised engine first, exact
@@ -80,6 +81,11 @@ pub struct Router {
     /// under load.
     batch_pool: Option<Arc<ThreadPool>>,
     batch_lane: OnceLock<BatchLane>,
+    /// Telemetry hub behind `STATS2`/`TRACE`: per-stage latency
+    /// histograms plus per-engine counters. Shared (via
+    /// [`Router::set_recorder`]) with engines that self-report stage
+    /// spans, and with the snapshotter for crash-safe export.
+    obs: Arc<Recorder>,
 }
 
 /// The engine-facing part of a request. Cheap to clone — the batch
@@ -105,6 +111,9 @@ struct LaneItem {
     x: f64,
     y: f64,
     tx: Sender<Response>,
+    /// Started at submit; its elapsed time at flush is the query's
+    /// `batch_wait` stage span.
+    enqueued: Timer,
 }
 
 /// The wired-in batching lane: the deadline batcher that groups
@@ -155,10 +164,10 @@ fn run_batch(
         .map(|slot| match slot {
             Some(Ok(hits)) => BatchEntry::Hits(hits),
             Some(Err(e)) => {
-                BatchEntry::Error { domain: e.tag().into(), message: e.to_string() }
+                BatchEntry::Error { code: ErrCode::from(&e), message: e.to_string() }
             }
             None => BatchEntry::Error {
-                domain: "runtime".into(),
+                code: ErrCode::Runtime,
                 message: "batch worker lost (panic or pool shutdown)".into(),
             },
         })
@@ -283,6 +292,7 @@ fn run_attempt(
     policy: &ResiliencePolicy,
     budget: Budget,
     metrics: &Arc<Metrics>,
+    obs: &Recorder,
 ) -> Result<Outcome> {
     let mut attempt = 0;
     loop {
@@ -296,7 +306,11 @@ fn run_attempt(
             {
                 metrics.record_retry();
                 let backoff = policy.retry.backoff_for(attempt);
-                std::thread::sleep(budget.clamp(Some(backoff)).unwrap_or(backoff));
+                let slept = budget.clamp(Some(backoff)).unwrap_or(backoff);
+                std::thread::sleep(slept);
+                // the retry stage span is the backoff wait: added
+                // latency the client paid because the attempt failed
+                obs.record_stage(Stage::Retry, slept.as_nanos() as u64);
                 if budget.expired() {
                     return Err(e);
                 }
@@ -319,12 +333,26 @@ fn settle_attempt(
     policy: &ResiliencePolicy,
     budget: Budget,
     metrics: &Arc<Metrics>,
+    obs: &Recorder,
 ) -> Result<Outcome> {
-    let res = run_attempt(engine, q, policy, budget, metrics);
+    // per-engine bookkeeping keys on the engine's own identity card,
+    // not on whatever registry alias the request used
+    let name = engine.info().name;
+    let t = Timer::new();
+    let res = run_attempt(engine, q, policy, budget, metrics, obs);
     match &res {
-        Ok(_) => breaker.record_success(),
-        Err(e) if is_client_error(e) => {}
+        Ok(out) => {
+            breaker.record_success();
+            obs.record_engine_ok(name, t.elapsed_ns());
+            if let Outcome::Batch(entries) = out {
+                obs.record_engine_batch(name, entries.len() as u64);
+            }
+        }
+        Err(e) if is_client_error(e) => {
+            obs.record_engine_err(name);
+        }
         Err(_) => {
+            obs.record_engine_err(name);
             if breaker.record_failure() {
                 metrics.record_trip();
             }
@@ -362,9 +390,19 @@ impl Router {
             metrics,
             batch_pool: None,
             batch_lane: OnceLock::new(),
+            obs: Arc::new(Recorder::new()),
         }
     }
 
+    /// Register `engine` under its own [`crate::engine::EngineInfo`]
+    /// name — the normal path, so breaker and fallback bookkeeping key
+    /// on the engine's identity card rather than a caller-chosen string.
+    pub fn register_engine(&mut self, engine: Arc<dyn NnEngine>) {
+        self.register(engine.info().name, engine);
+    }
+
+    /// Register `engine` under an explicit alias (tests and wrappers;
+    /// prefer [`register_engine`](Self::register_engine)).
     pub fn register(&mut self, name: impl Into<String>, engine: Arc<dyn NnEngine>) {
         let name = name.into();
         self.breakers
@@ -438,6 +476,18 @@ impl Router {
         &self.metrics
     }
 
+    /// The telemetry recorder behind `STATS2`/`TRACE`.
+    pub fn recorder(&self) -> &Arc<Recorder> {
+        &self.obs
+    }
+
+    /// Replace the recorder (before serving): lets `main` share one
+    /// recorder between the router, stage-reporting engines, and the
+    /// snapshotter's persisted `obs` generations.
+    pub fn set_recorder(&mut self, obs: Arc<Recorder>) {
+        self.obs = obs;
+    }
+
     /// Handle one request, recording metrics. Never panics; protocol
     /// and engine failures map to `Response::Error`.
     pub fn handle(&self, req: &Request) -> Response {
@@ -470,6 +520,10 @@ impl Router {
                     self.metrics.publish_expired_dropped(lane.batcher.expired_dropped());
                 }
                 Response::Text(self.metrics.snapshot().render())
+            }
+            Request::Stats2 { format, section } => self.stats2(*format, *section),
+            Request::Trace { k, x, y, engine } => {
+                self.trace_query(*k, *x, *y, engine.as_deref())
             }
             Request::Health => Response::Text(self.health_line()),
             Request::Ping => Response::Text("pong".into()),
@@ -513,6 +567,102 @@ impl Router {
         )
     }
 
+    /// Build the versioned `STATS2` telemetry document. Sections:
+    /// `stages` (per-stage latency histograms), `engines` (per-engine
+    /// counters keyed by `EngineInfo::name`), `coordinator` (the
+    /// structured form of the legacy STATS counters). `section = None`
+    /// returns all three.
+    fn stats2(&self, format: StatsFormat, section: Option<StatsSection>) -> Response {
+        if let Some(lane) = self.batch_lane.get() {
+            self.metrics.publish_expired_dropped(lane.batcher.expired_dropped());
+        }
+        let obs = self.obs.snapshot();
+        let metrics = self.metrics.snapshot();
+        let include = |s: StatsSection| section.is_none_or(|sel| sel == s);
+        match format {
+            StatsFormat::Json => {
+                let obs_doc = obs.to_json();
+                let pick = |key: &str| {
+                    obs_doc.get(key).cloned().unwrap_or_else(|| Json::Obj(Vec::new()))
+                };
+                let mut fields = vec![("v".to_string(), Json::num_u64(2))];
+                if include(StatsSection::Stages) {
+                    fields.push(("stages".to_string(), pick("stages")));
+                }
+                if include(StatsSection::Engines) {
+                    fields.push(("engines".to_string(), pick("engines")));
+                }
+                if include(StatsSection::Coordinator) {
+                    fields.push(("coordinator".to_string(), metrics.to_json()));
+                }
+                Response::Text(Json::Obj(fields).render())
+            }
+            StatsFormat::Text => {
+                let flat = obs.render_text();
+                let mut parts: Vec<String> = Vec::new();
+                if include(StatsSection::Stages) {
+                    parts.extend(
+                        flat.split_whitespace()
+                            .filter(|w| w.starts_with("stage."))
+                            .map(String::from),
+                    );
+                }
+                if include(StatsSection::Engines) {
+                    parts.extend(
+                        flat.split_whitespace()
+                            .filter(|w| w.starts_with("engine."))
+                            .map(String::from),
+                    );
+                }
+                if include(StatsSection::Coordinator) {
+                    parts.push(metrics.render());
+                }
+                Response::Text(parts.join(" "))
+            }
+        }
+    }
+
+    /// Run one query through `knn_trace` and return its span tree.
+    ///
+    /// Deliberately bypasses the resilience ladder — no retries,
+    /// hedging, fallback, or deadline — so the trace describes exactly
+    /// the engine asked about, not whichever engine rescue happened to
+    /// pick (see `docs/OBSERVABILITY.md`).
+    fn trace_query(&self, k: usize, x: f64, y: f64, engine_override: Option<&str>) -> Response {
+        let requested = engine_override.unwrap_or(&self.default_engine);
+        let Some(engine) = self.engines.get(requested) else {
+            self.metrics.record_error();
+            return Response::from_error(&AsnnError::Coordinator(format!(
+                "unknown engine {requested:?} (have: {})",
+                self.engine_names().join(", ")
+            )));
+        };
+        let name = engine.info().name;
+        let total = Timer::new();
+        let t_engine = Timer::new();
+        match engine.knn_trace(&[x, y], k) {
+            Ok((hits, search)) => {
+                let engine_ns = t_engine.elapsed_ns();
+                self.obs.record_engine_ok(name, engine_ns);
+                let trace = QueryTrace {
+                    engine: name.to_string(),
+                    k,
+                    query: vec![x, y],
+                    engine_ns,
+                    total_ns: total.elapsed_ns(),
+                    neighbors: hits.len(),
+                    search,
+                };
+                Response::Text(trace.to_json().render())
+            }
+            Err(e) => {
+                self.obs.record_engine_err(name);
+                self.metrics.record_error();
+                Response::from_error(&e)
+            }
+        }
+    }
+
     /// Try to route an engine-less KNN through the batching lane.
     /// `None` means "no lane, or the lane is gone" — the caller falls
     /// through to direct dispatch, so a dying batcher degrades to
@@ -525,7 +675,7 @@ impl Router {
         let lane = self.batch_lane.get()?;
         let t = Timer::new();
         let (tx, rx) = channel();
-        if !lane.batcher.submit(LaneItem { k, x, y, tx }) {
+        if !lane.batcher.submit(LaneItem { k, x, y, tx, enqueued: Timer::new() }) {
             return None;
         }
         match rx.recv_timeout(lane.wait) {
@@ -568,6 +718,9 @@ impl Router {
         }
         for (k, group) in groups {
             self.metrics.record_batch(group.len());
+            for item in &group {
+                self.obs.record_stage(Stage::BatchWait, item.enqueued.elapsed_ns());
+            }
             let queries: Arc<Vec<[f64; 2]>> =
                 Arc::new(group.iter().map(|it| [it.x, it.y]).collect());
             let q = Query::Batch { k, queries, pool: self.batch_pool.clone() };
@@ -576,8 +729,8 @@ impl Router {
                     for (item, entry) in group.into_iter().zip(entries) {
                         let resp = match entry {
                             BatchEntry::Hits(hits) => Response::Neighbors(hits),
-                            BatchEntry::Error { domain, message } => {
-                                Response::Error { domain, message }
+                            BatchEntry::Error { code, message } => {
+                                Response::Error { code, message }
                             }
                         };
                         let _ = item.tx.send(resp);
@@ -653,8 +806,15 @@ impl Router {
             if !breaker.allow() {
                 continue; // circuit open: skip without spending an attempt
             }
-            match settle_attempt(&self.engines[name], breaker, q, &self.policy, budget, &self.metrics)
-            {
+            match settle_attempt(
+                &self.engines[name],
+                breaker,
+                q,
+                &self.policy,
+                budget,
+                &self.metrics,
+                &self.obs,
+            ) {
                 Ok(out) => {
                     if name != requested {
                         self.metrics.record_fallback();
@@ -739,11 +899,14 @@ impl Router {
                         self.metrics.record_budget_exhausted();
                         return Err(budget_exhausted_error(budget, last_err));
                     }
-                    if hedge_wait.is_some()
-                        && self.launch(&chain, &mut next, true, q, budget, &tx)
-                    {
-                        self.metrics.record_hedge();
-                        inflight += 1;
+                    if let Some(waited) = hedge_wait {
+                        if self.launch(&chain, &mut next, true, q, budget, &tx) {
+                            self.metrics.record_hedge();
+                            // hedge stage span: how long the request sat
+                            // on a silent engine before the hedge fired
+                            self.obs.record_stage(Stage::Hedge, waited.as_nanos() as u64);
+                            inflight += 1;
+                        }
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
@@ -784,13 +947,15 @@ impl Router {
             }
             let engine = Arc::clone(&self.engines[name]);
             let metrics = Arc::clone(&self.metrics);
+            let obs = Arc::clone(&self.obs);
             let policy = self.policy;
             let q = q.clone();
             let tx = tx.clone();
             let spawned = std::thread::Builder::new()
                 .name("asnn-attempt".into())
                 .spawn(move || {
-                    let res = settle_attempt(&engine, &breaker, &q, &policy, budget, &metrics);
+                    let res =
+                        settle_attempt(&engine, &breaker, &q, &policy, budget, &metrics, &obs);
                     let _ = tx.send((idx, is_hedge, res));
                 });
             if spawned.is_ok() {
@@ -846,7 +1011,7 @@ mod tests {
     fn unknown_engine_is_protocol_error() {
         let r = router();
         match r.handle(&Request::Knn { k: 5, x: 0.5, y: 0.5, engine: Some("nope".into()) }) {
-            Response::Error { domain, .. } => assert_eq!(domain, "coordinator"),
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Coordinator),
             other => panic!("{other:?}"),
         }
         assert_eq!(r.metrics().snapshot().errors, 1);
@@ -869,7 +1034,7 @@ mod tests {
     fn engine_error_propagates_as_response() {
         let r = router();
         match r.handle(&Request::Knn { k: 0, x: 0.5, y: 0.5, engine: None }) {
-            Response::Error { domain, .. } => assert_eq!(domain, "query"),
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Query),
             other => panic!("{other:?}"),
         }
     }
@@ -880,7 +1045,7 @@ mod tests {
         // breakers untouched, no fallback recorded
         let r = router();
         match r.handle(&Request::Knn { k: 0, x: 0.5, y: 0.5, engine: Some("active".into()) }) {
-            Response::Error { domain, .. } => assert_eq!(domain, "query"),
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Query),
             other => panic!("{other:?}"),
         }
         let s = r.metrics().snapshot();
@@ -954,7 +1119,7 @@ mod tests {
             Arc::new(ChaosEngine::slow(brute, Duration::from_millis(300), 9)),
         );
         match r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }) {
-            Response::Error { domain, .. } => assert_eq!(domain, "timeout"),
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Timeout),
             other => panic!("{other:?}"),
         }
         assert_eq!(r.metrics().snapshot().timeouts, 1);
@@ -986,7 +1151,7 @@ mod tests {
         );
         r.register("chaos", Arc::new(chaos));
         match r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }) {
-            Response::Error { domain, .. } => assert_eq!(domain, "timeout"),
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Timeout),
             other => panic!("{other:?}"),
         }
         // give the abandoned helper thread time to panic and report
@@ -1086,7 +1251,7 @@ mod tests {
         );
         let t0 = std::time::Instant::now();
         match r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }) {
-            Response::Error { domain, .. } => assert_eq!(domain, "timeout"),
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Timeout),
             other => panic!("{other:?}"),
         }
         assert!(t0.elapsed() < Duration::from_millis(250), "{:?}", t0.elapsed());
@@ -1196,7 +1361,7 @@ mod tests {
             queries: vec![[0.2, 0.8]],
             engine: Some("nope".into()),
         }) {
-            Response::Error { domain, .. } => assert_eq!(domain, "coordinator"),
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Coordinator),
             other => panic!("{other:?}"),
         }
     }
@@ -1215,7 +1380,7 @@ mod tests {
                 assert_eq!(entries.len(), 2);
                 for e in &entries {
                     match e {
-                        BatchEntry::Error { domain, .. } => assert_eq!(domain, "query"),
+                        BatchEntry::Error { code, .. } => assert_eq!(*code, ErrCode::Query),
                         other => panic!("{other:?}"),
                     }
                 }
@@ -1245,8 +1410,8 @@ mod tests {
                 assert_eq!(entries.len(), 4);
                 for e in entries {
                     match e {
-                        BatchEntry::Error { domain, message } => {
-                            assert_eq!(domain, "runtime");
+                        BatchEntry::Error { code, message } => {
+                            assert_eq!(code, ErrCode::Runtime);
                             assert!(message.contains("batch worker lost"), "{message}");
                         }
                         other => panic!("{other:?}"),
@@ -1375,8 +1540,8 @@ mod tests {
         }
         for h in late {
             match h.join().unwrap() {
-                Response::Error { domain, message } => {
-                    assert_eq!(domain, "timeout");
+                Response::Error { code, message } => {
+                    assert_eq!(code, ErrCode::Timeout);
                     assert!(message.contains("budget exhausted"), "{message}");
                 }
                 other => panic!("{other:?}"),
@@ -1389,5 +1554,144 @@ mod tests {
         assert_eq!(s.errors, 2, "{s:?}");
         assert_eq!(s.knn_requests, 1, "{s:?}");
         assert_eq!(s.batched_queries, 1, "{s:?}");
+    }
+
+    #[test]
+    fn register_engine_keys_on_info_name() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(300, 92)));
+        let mut r = Router::new("brute", Arc::new(Metrics::new()));
+        r.register_engine(Arc::new(BruteEngine::new(ds)));
+        assert_eq!(r.engine_names(), vec!["brute".to_string()]);
+        match r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }) {
+            Response::Neighbors(hits) => assert_eq!(hits.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats2_json_reports_engines_and_coordinator() {
+        let r = router();
+        for _ in 0..3 {
+            r.handle(&Request::Knn { k: 5, x: 0.5, y: 0.5, engine: None });
+        }
+        r.handle(&Request::Knn { k: 0, x: 0.5, y: 0.5, engine: None }); // client error
+        let doc = match r.handle(&Request::Stats2 {
+            format: StatsFormat::Json,
+            section: None,
+        }) {
+            Response::Text(t) => Json::parse(&t).unwrap(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(doc.get("v").and_then(Json::as_u64), Some(2));
+        // every stage histogram is present, even if empty
+        let stages = doc.get("stages").unwrap();
+        for stage in Stage::ALL {
+            let h = stages.get(stage.as_str()).unwrap_or_else(|| panic!("{stage:?}"));
+            assert!(h.get("p50_ns").is_some(), "{stage:?}");
+        }
+        // the brute default engine settled 3 ok + 1 failed attempt
+        let brute = doc.get("engines").unwrap().get("brute").unwrap();
+        assert_eq!(brute.get("requests").and_then(Json::as_u64), Some(4));
+        assert_eq!(brute.get("errors").and_then(Json::as_u64), Some(1));
+        // coordinator section mirrors the legacy counters
+        let coord = doc.get("coordinator").unwrap();
+        assert_eq!(coord.get("knn_requests").and_then(Json::as_u64), Some(3));
+        assert_eq!(coord.get("errors").and_then(Json::as_u64), Some(1));
+    }
+
+    #[test]
+    fn stats2_sections_filter_the_document() {
+        let r = router();
+        let engines_only = match r.handle(&Request::Stats2 {
+            format: StatsFormat::Json,
+            section: Some(StatsSection::Engines),
+        }) {
+            Response::Text(t) => Json::parse(&t).unwrap(),
+            other => panic!("{other:?}"),
+        };
+        assert!(engines_only.get("engines").is_some());
+        assert!(engines_only.get("stages").is_none());
+        assert!(engines_only.get("coordinator").is_none());
+
+        match r.handle(&Request::Stats2 {
+            format: StatsFormat::Text,
+            section: Some(StatsSection::Coordinator),
+        }) {
+            // text coordinator section is exactly the legacy STATS line
+            Response::Text(t) => assert_eq!(t, r.metrics().snapshot().render()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_returns_span_tree_with_bounded_durations() {
+        let r = router();
+        let doc = match r.handle(&Request::Trace {
+            k: 7,
+            x: 0.5,
+            y: 0.5,
+            engine: Some("active".into()),
+        }) {
+            Response::Text(t) => Json::parse(&t).unwrap(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(doc.get("engine").and_then(Json::as_str), Some("active"));
+        assert_eq!(doc.get("neighbors").and_then(Json::as_u64), Some(7));
+        let total_ns = doc.get("total_ns").and_then(Json::as_u64).unwrap();
+        let root = doc.get("root").unwrap();
+        let engine_span = &root.get("children").unwrap().as_arr().unwrap()[0];
+        let engine_ns = engine_span.get("dur_ns").and_then(Json::as_u64).unwrap();
+        let leaf_sum: u64 = engine_span
+            .get("children")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|l| l.get("dur_ns").and_then(Json::as_u64).unwrap())
+            .sum();
+        assert!(leaf_sum <= engine_ns, "{leaf_sum} > {engine_ns}");
+        assert!(engine_ns <= total_ns, "{engine_ns} > {total_ns}");
+        // the active engine reports real per-stage spans
+        let names: Vec<&str> = engine_span
+            .get("children")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|l| l.get("name").and_then(Json::as_str).unwrap())
+            .collect();
+        assert!(names.contains(&"coarse"), "{names:?}");
+        assert!(names.contains(&"scan"), "{names:?}");
+    }
+
+    #[test]
+    fn trace_unknown_engine_is_coordinator_error() {
+        let r = router();
+        match r.handle(&Request::Trace { k: 3, x: 0.5, y: 0.5, engine: Some("nope".into()) }) {
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Coordinator),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn retries_feed_the_retry_stage_histogram() {
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(300, 93)));
+        let brute: Arc<dyn NnEngine> = Arc::new(BruteEngine::new(ds));
+        let policy = ResiliencePolicy {
+            retry: RetryPolicy { max_retries: 3, backoff: Duration::from_millis(1) },
+            ..ResiliencePolicy::default()
+        };
+        let mut r = Router::with_policy("chaos", Arc::new(Metrics::new()), policy);
+        // flapping period 2: first two calls fail, next two succeed —
+        // the retry loop crosses into the healthy window
+        r.register("chaos", Arc::new(ChaosEngine::flapping(brute, 2, 94)));
+        match r.handle(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }) {
+            Response::Neighbors(hits) => assert_eq!(hits.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        let snap = r.recorder().snapshot();
+        assert_eq!(snap.stage(Stage::Retry).unwrap().count, 2);
+        let chaos = snap.engines.iter().find(|e| e.name == "chaos").unwrap();
+        assert_eq!(chaos.requests, 1); // one settled attempt, retried internally
     }
 }

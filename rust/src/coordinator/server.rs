@@ -35,7 +35,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
-use super::protocol::{Request, Response};
+use super::protocol::{ErrCode, Request, Response};
 use super::router::Router;
 use super::worker::ThreadPool;
 use crate::error::{AsnnError, Result};
@@ -388,7 +388,7 @@ fn handle_connection(
             Ok(LineStep::TooLong) => {
                 metrics.record_oversize_rejected();
                 let resp = Response::Error {
-                    domain: "too-long".into(),
+                    code: ErrCode::TooLong,
                     message: format!(
                         "request line exceeds {} bytes",
                         limits.max_line_bytes
@@ -498,7 +498,7 @@ mod tests {
         let mut client = Client::connect(&handle.addr).unwrap();
         assert_eq!(client.call(&Request::Ping).unwrap(), Response::Text("pong".into()));
         match client.call(&Request::Knn { k: 0, x: 0.0, y: 0.0, engine: None }).unwrap() {
-            Response::Error { domain, .. } => assert_eq!(domain, "query"),
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Query),
             other => panic!("{other:?}"),
         }
         match client.call(&Request::Stats).unwrap() {
@@ -549,8 +549,8 @@ mod tests {
         // second connection is shed with a structured overload error
         let mut extra = Client::connect(&handle.addr).unwrap();
         match extra.call(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }).unwrap() {
-            Response::Error { domain, message } => {
-                assert_eq!(domain, "overload");
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrCode::Overload);
                 assert!(message.contains("retry"), "{message}");
             }
             other => panic!("{other:?}"),

@@ -13,6 +13,13 @@
 //! Successful saves tick the `snapshots` counter; failed saves tick
 //! `snapshot_failures` and are retried on the next interval — a full
 //! disk degrades durability, never serving.
+//!
+//! Two source flavors exist: *fixed* sources carry immutable bytes
+//! (dataset, grid index) and are only re-published when the store has
+//! lost its valid generation; *dynamic* sources re-evaluate a closure
+//! each interval and publish the fresh bytes every tick, so mutating
+//! state — the observability recorder's counters and histograms —
+//! survives a crash with at most one interval of loss.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -26,6 +33,37 @@ use crate::store::SnapshotStore;
 /// snapshot intervals.
 const SLICE: Duration = Duration::from_millis(50);
 
+/// A store paired with the payload it should durably hold.
+pub struct SnapshotSource {
+    store: SnapshotStore,
+    payload: Payload,
+}
+
+enum Payload {
+    /// Immutable bytes: published once at spawn, re-published only if
+    /// the store loses its valid generation.
+    Fixed(Vec<u8>),
+    /// Re-evaluated each interval: fresh bytes are published every
+    /// tick so mutating state survives a crash.
+    Dynamic(Box<dyn Fn() -> Vec<u8> + Send>),
+}
+
+impl SnapshotSource {
+    /// A source whose payload never changes (dataset, grid index).
+    pub fn fixed(store: SnapshotStore, payload: Vec<u8>) -> Self {
+        Self { store, payload: Payload::Fixed(payload) }
+    }
+
+    /// A source whose payload is recomputed at every interval (the
+    /// observability recorder's export).
+    pub fn dynamic<F>(store: SnapshotStore, f: F) -> Self
+    where
+        F: Fn() -> Vec<u8> + Send + 'static,
+    {
+        Self { store, payload: Payload::Dynamic(Box::new(f)) }
+    }
+}
+
 /// Handle for the background snapshot thread; stops and joins on drop.
 pub struct Snapshotter {
     stop: Arc<AtomicBool>,
@@ -33,11 +71,28 @@ pub struct Snapshotter {
 }
 
 impl Snapshotter {
-    /// Spawn the snapshot thread. `sources` pairs each store with the
-    /// payload bytes it should durably hold. An `interval` of zero
-    /// means snapshot once at spawn and never again (no repair loop).
+    /// Spawn the snapshot thread over fixed-payload sources. `sources`
+    /// pairs each store with the payload bytes it should durably hold.
+    /// An `interval` of zero means snapshot once at spawn and never
+    /// again (no repair loop).
     pub fn spawn(
         sources: Vec<(SnapshotStore, Vec<u8>)>,
+        interval: Duration,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        let sources = sources
+            .into_iter()
+            .map(|(store, payload)| SnapshotSource::fixed(store, payload))
+            .collect();
+        Self::spawn_sources(sources, interval, metrics)
+    }
+
+    /// Spawn the snapshot thread over a mix of fixed and dynamic
+    /// sources. Every source is published at spawn; each interval,
+    /// fixed sources are repaired if their generation was lost while
+    /// dynamic sources re-evaluate their closure and publish fresh.
+    pub fn spawn_sources(
+        sources: Vec<SnapshotSource>,
         interval: Duration,
         metrics: Arc<Metrics>,
     ) -> Result<Self> {
@@ -46,8 +101,11 @@ impl Snapshotter {
         let join = std::thread::Builder::new()
             .name("asnn-snapshot".into())
             .spawn(move || {
-                for (store, payload) in &sources {
-                    publish(store, payload, &metrics);
+                for src in &sources {
+                    match &src.payload {
+                        Payload::Fixed(bytes) => publish(&src.store, bytes, &metrics),
+                        Payload::Dynamic(f) => publish(&src.store, &f(), &metrics),
+                    }
                 }
                 if interval.is_zero() {
                     return;
@@ -58,8 +116,11 @@ impl Snapshotter {
                     elapsed += SLICE;
                     if elapsed >= interval {
                         elapsed = Duration::ZERO;
-                        for (store, payload) in &sources {
-                            repair(store, payload, &metrics);
+                        for src in &sources {
+                            match &src.payload {
+                                Payload::Fixed(bytes) => repair(&src.store, bytes, &metrics),
+                                Payload::Dynamic(f) => publish(&src.store, &f(), &metrics),
+                            }
                         }
                     }
                 }
@@ -189,6 +250,40 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
         }
         assert!(ok, "snapshot not re-published after wipe");
+        assert!(metrics.snapshot().snapshots >= 2);
+        snapper.shutdown();
+        fs::remove_dir_all(s.dir()).ok();
+    }
+
+    #[test]
+    fn dynamic_source_publishes_fresh_payload_each_interval() {
+        use std::sync::atomic::AtomicU64;
+        let s = store("dynamic");
+        let metrics = Arc::new(Metrics::new());
+        let gen = Arc::new(AtomicU64::new(0));
+        let gen2 = Arc::clone(&gen);
+        let snapper = Snapshotter::spawn_sources(
+            vec![SnapshotSource::dynamic(s.clone(), move || {
+                let n = gen2.fetch_add(1, Ordering::SeqCst);
+                format!("export-{n}").into_bytes()
+            })],
+            Duration::from_millis(60),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        // the closure is re-evaluated and re-published every interval,
+        // so the latest generation must eventually move past the first
+        let mut ok = false;
+        for _ in 0..100 {
+            if let Ok(Some(snap)) = s.load_latest() {
+                if snap.payload != b"export-0" {
+                    ok = true;
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(ok, "dynamic payload never refreshed");
         assert!(metrics.snapshot().snapshots >= 2);
         snapper.shutdown();
         fs::remove_dir_all(s.dir()).ok();

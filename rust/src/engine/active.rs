@@ -13,7 +13,7 @@
 use std::cell::RefCell;
 use std::sync::Arc;
 
-use super::{Neighbor, NnEngine, QueryStats, TopK};
+use super::{EngineInfo, Neighbor, NnEngine, QueryStats, TopK};
 use crate::active::radius::{RadiusPolicy, Step};
 use crate::active::scan;
 use crate::active::{SearchStep, SearchTrace};
@@ -22,6 +22,8 @@ use crate::data::soa::SoaMirror;
 use crate::data::Dataset;
 use crate::error::{AsnnError, Result};
 use crate::grid::{MultiGrid, Pyramid};
+use crate::obs::{Recorder, Stage};
+use crate::util::timer::Timer;
 
 /// Tuning for the active engine. Defaults are the paper's §3 setup.
 #[derive(Debug, Clone)]
@@ -72,6 +74,10 @@ pub struct ActiveEngine {
     /// (built only when the dataset is present and mode is `Refined`).
     soa: Option<SoaMirror>,
     params: ActiveParams,
+    /// Stage telemetry sink. When attached, every query's
+    /// coarse/scan/refine wall-clock goes into the shared recorder;
+    /// when absent the hot path takes no timestamps at all.
+    recorder: Option<Arc<Recorder>>,
 }
 
 /// Per-thread query scratch: every buffer the hot path needs, reusable
@@ -150,7 +156,13 @@ impl ActiveEngine {
             (Some(ds), SearchMode::Refined) => Some(SoaMirror::build(ds)),
             _ => None,
         };
-        Self { grid, data, pyramid, soa, params }
+        Self { grid, data, pyramid, soa, params, recorder: None }
+    }
+
+    /// Attach the shared observability recorder. Call before the engine
+    /// is wrapped in an `Arc` and registered with the router.
+    pub fn set_recorder(&mut self, recorder: Arc<Recorder>) {
+        self.recorder = Some(recorder);
     }
 
     pub fn grid(&self) -> &MultiGrid {
@@ -256,17 +268,30 @@ impl ActiveEngine {
     }
 
     /// One query through a caller-owned [`Scratch`] — the shared body
-    /// of `knn_stats` and `knn_batch`. Candidates stream through the
-    /// bounded [`TopK`] heap (no full sort, no truncate); refined mode
-    /// runs the SoA f32 kernel over the candidate ids and defers the
-    /// square root to the k survivors.
-    fn knn_stats_scratch(
+    /// of `knn_stats`, `knn_trace`, and `knn_batch`. Candidates stream
+    /// through the bounded [`TopK`] heap (no full sort, no truncate);
+    /// refined mode runs the SoA f32 kernel over the candidate ids and
+    /// defers the square root to the k survivors.
+    ///
+    /// With `timed` set, the three pipeline stages (coarse radius loop,
+    /// disk scan, re-rank) are wall-clocked into the returned trace's
+    /// spans and fed to the attached recorder; untimed queries skip the
+    /// clock reads entirely so the batched hot path stays bare.
+    fn query_scratch(
         &self,
         q: &[f64],
         k: usize,
         s: &mut Scratch,
-    ) -> Result<(Vec<Neighbor>, QueryStats)> {
+        timed: bool,
+    ) -> Result<(Vec<Neighbor>, QueryStats, SearchTrace)> {
+        #[inline]
+        fn tick(timed: bool) -> Option<Timer> {
+            timed.then(Timer::new)
+        }
+        let t_coarse = tick(timed);
         let circle = self.search(q, k)?;
+        let coarse_ns = t_coarse.map(|t| t.elapsed_ns());
+        let t_scan = tick(timed);
         scan::collect_in_disk_into(
             &self.grid,
             circle.cx,
@@ -275,6 +300,8 @@ impl ActiveEngine {
             self.params.metric,
             &mut s.cands,
         );
+        let scan_ns = t_scan.map(|t| t.elapsed_ns());
+        let t_refine = tick(timed);
         let px_len = self.grid.geometry().pixel_size()[0];
         s.top.reset(k);
         let squared = match self.params.mode {
@@ -317,18 +344,29 @@ impl ActiveEngine {
                 h.dist = h.dist.sqrt();
             }
         }
-        let work: u64 = circle
-            .trace
-            .steps
-            .iter()
-            .map(|st| scan::disk_pixels(st.r, self.params.metric))
-            .sum();
+        let mut trace = circle.trace;
+        if let Some(ns) = coarse_ns {
+            trace.push_span(Stage::Coarse, ns);
+        }
+        if let Some(ns) = scan_ns {
+            trace.push_span(Stage::Scan, ns);
+        }
+        if let Some(t) = t_refine {
+            trace.push_span(Stage::Refine, t.elapsed_ns());
+        }
+        if let Some(rec) = &self.recorder {
+            for span in &trace.spans {
+                rec.record_stage(span.stage, span.dur_ns);
+            }
+        }
+        let work: u64 =
+            trace.steps.iter().map(|st| scan::disk_pixels(st.r, self.params.metric)).sum();
         let stats = QueryStats {
             work,
-            iterations: circle.trace.iterations() as u32,
-            converged: circle.trace.converged,
+            iterations: trace.iterations() as u32,
+            converged: trace.converged,
         };
-        Ok((out, stats))
+        Ok((out, stats, trace))
     }
 
     fn check(&self, q: &[f64], k: usize) -> Result<()> {
@@ -353,6 +391,10 @@ impl NnEngine for ActiveEngine {
         "active"
     }
 
+    fn info(&self) -> EngineInfo {
+        EngineInfo { name: self.name(), supports_batch: true, supports_trace: true }
+    }
+
     fn len(&self) -> usize {
         self.grid.n_points()
     }
@@ -362,18 +404,33 @@ impl NnEngine for ActiveEngine {
     }
 
     fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
-        SCRATCH.with(|s| self.knn_stats_scratch(q, k, &mut s.borrow_mut()))
+        let timed = self.recorder.is_some();
+        SCRATCH.with(|s| {
+            self.query_scratch(q, k, &mut s.borrow_mut(), timed)
+                .map(|(hits, stats, _)| (hits, stats))
+        })
+    }
+
+    /// Real per-stage tracing: the coarse radius loop, the disk scan,
+    /// and the re-rank each get a wall-clock span, alongside the radius
+    /// schedule in `steps`.
+    fn knn_trace(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, SearchTrace)> {
+        SCRATCH.with(|s| {
+            self.query_scratch(q, k, &mut s.borrow_mut(), true)
+                .map(|(hits, _, trace)| (hits, trace))
+        })
     }
 
     /// Batched kNN: borrow this worker's scratch once for the whole
     /// batch — candidate, id, distance, and heap buffers are reused
     /// across every query in it.
     fn knn_batch(&self, queries: &[&[f64]], k: usize) -> Vec<Result<Vec<Neighbor>>> {
+        let timed = self.recorder.is_some();
         SCRATCH.with(|s| {
             let s = &mut *s.borrow_mut();
             queries
                 .iter()
-                .map(|q| self.knn_stats_scratch(q, k, s).map(|(hits, _)| hits))
+                .map(|q| self.query_scratch(q, k, s, timed).map(|(hits, _, _)| hits))
                 .collect()
         })
     }
@@ -480,6 +537,31 @@ mod tests {
         assert!(!c.trace.steps.is_empty());
         assert_eq!(c.trace.steps.last().unwrap().r, c.r);
         assert!(c.trace.converged);
+    }
+
+    #[test]
+    fn knn_trace_reports_stage_spans_and_feeds_recorder() {
+        use crate::obs::{Recorder, Stage};
+        let ds = Arc::new(generate(&SyntheticSpec::paper_default(5000, 66)));
+        let mut e = ActiveEngine::new(ds, 500, ActiveParams::default()).unwrap();
+        let rec = Arc::new(Recorder::new());
+        e.set_recorder(Arc::clone(&rec));
+        assert!(e.info().supports_trace && e.info().supports_batch);
+
+        let (hits, trace) = e.knn_trace(&[0.5, 0.5], 7).unwrap();
+        assert!(!hits.is_empty());
+        assert!(!trace.steps.is_empty());
+        for stage in [Stage::Coarse, Stage::Scan, Stage::Refine] {
+            assert!(trace.spans.iter().any(|s| s.stage == stage), "missing {stage:?} span");
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.stage(Stage::Coarse).unwrap().count, 1);
+        assert_eq!(snap.stage(Stage::Scan).unwrap().count, 1);
+        assert_eq!(snap.stage(Stage::Refine).unwrap().count, 1);
+
+        // recorder-attached engines also time ordinary knn_stats calls
+        e.knn_stats(&[0.4, 0.4], 7).unwrap();
+        assert_eq!(rec.snapshot().stage(Stage::Coarse).unwrap().count, 2);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use std::cell::RefCell;
 use std::sync::Arc;
 
-use super::{Neighbor, NnEngine, QueryStats, TopK};
+use super::{EngineInfo, Neighbor, NnEngine, QueryStats, TopK};
 use crate::data::Dataset;
 use crate::error::{AsnnError, Result};
 
@@ -72,6 +72,10 @@ impl BruteEngine {
 impl NnEngine for BruteEngine {
     fn name(&self) -> &'static str {
         "brute"
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo { name: self.name(), supports_batch: true, supports_trace: false }
     }
 
     fn len(&self) -> usize {

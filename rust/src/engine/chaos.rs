@@ -11,8 +11,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use super::{Neighbor, NnEngine, QueryStats};
+use super::{EngineInfo, Neighbor, NnEngine, QueryStats};
 use crate::error::{AsnnError, Result};
+use crate::obs::SearchTrace;
 use crate::util::rng::Rng;
 
 /// Injection probabilities and shape. Rates are independent per call:
@@ -152,6 +153,12 @@ impl NnEngine for ChaosEngine {
         "chaos"
     }
 
+    fn info(&self) -> EngineInfo {
+        // Identity is its own (breakers must key on the wrapper), but
+        // capabilities are whatever the wrapped engine can do.
+        EngineInfo { name: self.name(), ..self.inner.info() }
+    }
+
     fn len(&self) -> usize {
         self.inner.len()
     }
@@ -164,6 +171,11 @@ impl NnEngine for ChaosEngine {
     fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
         self.inject()?;
         self.inner.knn_stats(q, k)
+    }
+
+    fn knn_trace(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, SearchTrace)> {
+        self.inject()?;
+        self.inner.knn_trace(q, k)
     }
 
     fn classify(&self, q: &[f64], k: usize) -> Result<u16> {

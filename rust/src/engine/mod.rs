@@ -22,6 +22,25 @@ pub mod kdtree;
 pub mod lsh;
 
 use crate::error::Result;
+use crate::obs::trace::{SearchTrace, Stage};
+use crate::util::timer::Timer;
+
+/// Static identity + capability card for an engine, reported by
+/// [`NnEngine::info`]. The router keys its breaker/fallback bookkeeping
+/// on `info().name` and gates feature dispatch on the capability flags
+/// instead of matching engine-name strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineInfo {
+    /// Stable engine name (also the wire/registration identity).
+    pub name: &'static str,
+    /// True when `knn_batch` is a native batched implementation that
+    /// amortizes scratch across queries (not the sequential default).
+    pub supports_batch: bool,
+    /// True when `knn_trace` reports real per-stage spans (coarse /
+    /// scan / refine) rather than the single whole-query span the
+    /// default implementation synthesizes.
+    pub supports_trace: bool,
+}
 
 /// One returned neighbor.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -49,6 +68,13 @@ pub struct QueryStats {
 pub trait NnEngine: Send + Sync {
     fn name(&self) -> &'static str;
 
+    /// Identity and capability card. The default claims no native
+    /// batching and no staged tracing; engines with real
+    /// implementations override it.
+    fn info(&self) -> EngineInfo {
+        EngineInfo { name: self.name(), supports_batch: false, supports_trace: false }
+    }
+
     /// Number of indexed points.
     fn len(&self) -> usize;
 
@@ -73,6 +99,19 @@ pub trait NnEngine: Send + Sync {
     fn knn_stats(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
         let hits = self.knn(q, k)?;
         Ok((hits, QueryStats { converged: true, ..Default::default() }))
+    }
+
+    /// kNN with a populated [`SearchTrace`] — the record behind the
+    /// `TRACE` wire verb. The default times the whole query as one
+    /// `scan` span and carries over the engine's own `knn_stats`
+    /// convergence flag; staged engines override it with real
+    /// per-stage spans and the radius schedule.
+    fn knn_trace(&self, q: &[f64], k: usize) -> Result<(Vec<Neighbor>, SearchTrace)> {
+        let t = Timer::new();
+        let (hits, stats) = self.knn_stats(q, k)?;
+        let mut trace = SearchTrace { converged: stats.converged, ..Default::default() };
+        trace.push_span(Stage::Scan, t.elapsed_ns());
+        Ok((hits, trace))
     }
 
     /// Majority-vote classification over the k nearest neighbors.

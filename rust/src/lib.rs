@@ -31,6 +31,7 @@ pub mod data;
 pub mod engine;
 pub mod error;
 pub mod grid;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod store;

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use asnn::config::{AsnnConfig, EngineKind, Metric, R0Policy, SearchMode};
 use asnn::coordinator::{
-    IoLimits, Metrics, ResiliencePolicy, Router, Server, Snapshotter, ThreadPool,
+    IoLimits, Metrics, ResiliencePolicy, Router, Server, SnapshotSource, Snapshotter, ThreadPool,
 };
 use asnn::data::synthetic::{generate, generate_queries, Family, SyntheticSpec};
 use asnn::data::{io as dio, Dataset};
@@ -28,6 +28,7 @@ use asnn::engine::lsh::{LshEngine, LshParams};
 use asnn::engine::NnEngine;
 use asnn::error::{AsnnError, Result};
 use asnn::grid::{snapshot as grid_snapshot, MultiGrid};
+use asnn::obs::Recorder;
 use asnn::store::{self, SnapshotStore};
 #[cfg(feature = "pjrt")]
 use asnn::runtime::RuntimeService;
@@ -144,7 +145,7 @@ fn active_params(cfg: &AsnnConfig) -> ActiveParams {
         mode: cfg.search.mode,
         r0_policy: cfg.search.r0_policy,
         tolerance: cfg.search.tolerance,
-        coarse_skip: false,
+        coarse_skip: cfg.search.coarse_skip,
     }
 }
 
@@ -360,40 +361,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(ds) => ds,
         None => load_dataset(args, &cfg)?,
     };
+
+    // shared observability recorder: the active engine self-reports
+    // coarse/refine/scan spans into it, the router adds per-engine
+    // counters plus retry/hedge/batch-wait spans, and STATS2/TRACE
+    // read it back out. Restored from the last obs export so stage
+    // histograms survive restarts.
+    let recorder = cfg.obs.enabled.then(|| Arc::new(Recorder::new()));
+    let obs_store = store_dir
+        .as_ref()
+        .map(|dir| SnapshotStore::new(dir.clone(), "obs", cfg.store.keep));
+    if let (Some(rec), Some(os)) = (&recorder, &obs_store) {
+        match os.load_latest() {
+            Ok(Some(snap)) => {
+                metrics.record_corrupt_quarantined(snap.quarantined.len() as u64);
+                match rec.restore_bytes(&snap.payload) {
+                    Ok(()) => {
+                        println!("warm boot: obs counters from snapshot generation {}", snap.seq)
+                    }
+                    Err(e) => eprintln!("store: obs snapshot unusable, starting fresh: {e}"),
+                }
+            }
+            Ok(None) => {}
+            Err(e) => eprintln!("store: obs recovery failed: {e}"),
+        }
+    }
+
     let active = {
         let restored = stores
             .as_ref()
             .and_then(|(_, gs)| recover_active_engine(gs, &ds, &cfg, &metrics));
-        match restored {
-            Some(engine) => Arc::new(engine),
-            None => Arc::new(ActiveEngine::new(
-                ds.clone(),
-                cfg.grid.resolution,
-                active_params(&cfg),
-            )?),
+        let mut engine = match restored {
+            Some(engine) => engine,
+            None => ActiveEngine::new(ds.clone(), cfg.grid.resolution, active_params(&cfg))?,
+        };
+        if let Some(rec) = &recorder {
+            engine.set_recorder(Arc::clone(rec));
         }
+        Arc::new(engine)
     };
 
     let policy = ResiliencePolicy::from_config(&cfg.resilience);
     let mut router = Router::with_policy(cfg.engine.name(), Arc::clone(&metrics), policy);
-    // always register the cheap engines; PJRT only when artifacts exist
-    router.register("brute", Arc::new(BruteEngine::new(ds.clone())));
-    router.register("kdtree", Arc::new(KdTreeEngine::build(ds.clone())));
-    router.register("lsh", Arc::new(LshEngine::build(ds.clone(), LshParams::default())));
-    router.register("active", Arc::clone(&active) as Arc<dyn NnEngine>);
+    if let Some(rec) = &recorder {
+        router.set_recorder(Arc::clone(rec));
+    }
+    // always register the cheap engines; PJRT only when artifacts
+    // exist. register_engine keys each on its own EngineInfo name.
+    router.register_engine(Arc::new(BruteEngine::new(ds.clone())));
+    router.register_engine(Arc::new(KdTreeEngine::build(ds.clone())));
+    router.register_engine(Arc::new(LshEngine::build(ds.clone(), LshParams::default())));
+    router.register_engine(Arc::clone(&active) as Arc<dyn NnEngine>);
     let artifacts = Path::new(&cfg.runtime.artifacts_dir);
     #[cfg(feature = "pjrt")]
     if artifacts.join("manifest.toml").exists() {
         let service = RuntimeService::spawn(artifacts.into())?;
-        router.register(
-            "active-pjrt",
-            Arc::new(ActivePjrtEngine::new(
-                ds.clone(),
-                cfg.grid.resolution,
-                active_params(&cfg),
-                service,
-            )?),
-        );
+        router.register_engine(Arc::new(ActivePjrtEngine::new(
+            ds.clone(),
+            cfg.grid.resolution,
+            active_params(&cfg),
+            service,
+        )?));
         println!("loaded PJRT artifacts from {}", artifacts.display());
     } else {
         println!("no artifacts at {} — PJRT engine disabled", artifacts.display());
@@ -440,6 +468,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Arc::clone(&metrics),
         )?),
         None => None,
+    };
+
+    // observability export rides its own snapshotter because its
+    // cadence (obs.export_interval_ms) is independent of the state
+    // snapshot repair interval; the dynamic source re-reads the
+    // recorder every tick so the newest counters are what survive
+    let _obs_snapshotter = match (&recorder, &obs_store) {
+        (Some(rec), Some(os)) if cfg.obs.export_interval_ms > 0 => {
+            let rec = Arc::clone(rec);
+            Some(Snapshotter::spawn_sources(
+                vec![SnapshotSource::dynamic(os.clone(), move || rec.export_bytes())],
+                std::time::Duration::from_millis(cfg.obs.export_interval_ms),
+                Arc::clone(&metrics),
+            )?)
+        }
+        _ => None,
     };
 
     println!(

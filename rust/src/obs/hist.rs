@@ -1,0 +1,269 @@
+//! Lock-free fixed-bucket latency histogram.
+//!
+//! Same bucketing as [`crate::util::stats::LatencyHistogram`] — 64
+//! power-of-two buckets indexed by `floor(log2(ns))` — but counters are
+//! relaxed atomics so the serving hot path records without taking a
+//! lock (the coordinator's `Metrics` histograms sit behind a `Mutex`;
+//! per-stage recording happens inside the engine's query loop where
+//! that would show up).
+//!
+//! Quantiles are read from an immutable [`HistSnapshot`] and report the
+//! bucket's upper edge, so they overestimate by at most 2×, never
+//! underestimate — the same contract as the locked histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::json::Json;
+use crate::error::{AsnnError, Result};
+
+const BUCKETS: usize = 64;
+
+/// Bucket index for a nanosecond value: `floor(log2(ns))`, with 0 ns
+/// clamped into bucket 0.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    (63 - ns.max(1).leading_zeros()) as usize
+}
+
+/// Lock-free histogram: record with relaxed atomics, read via
+/// [`snapshot`](AtomicHistogram::snapshot).
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Wait-free; safe from any thread.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Add a previously captured snapshot's counts (snapshot restore
+    /// after a crash, or merging shards).
+    pub fn add(&self, snap: &HistSnapshot) {
+        for (bucket, &n) in self.buckets.iter().zip(snap.buckets.iter()) {
+            if n > 0 {
+                bucket.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(snap.count, Ordering::Relaxed);
+        self.sum_ns.fetch_add(snap.sum_ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(snap.max_ns, Ordering::Relaxed);
+    }
+
+    /// Capture a point-in-time copy. Individual counters are read
+    /// relaxed, so a snapshot taken mid-record can be off by the
+    /// in-flight sample — fine for telemetry.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable histogram state: the unit of quantile math, JSON export,
+/// and snapshot persistence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { buckets: [0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl HistSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean in nanoseconds; 0 when empty (JSON has no NaN).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile upper bound in nanoseconds for `q ∈ [0, 1]`: the upper
+    /// edge of the bucket holding the q-th sample. 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        self.max_ns
+    }
+
+    /// JSON export: summary quantiles plus the sparse bucket vector
+    /// (`[[index, count], ...]`) so snapshots restore losslessly without
+    /// shipping 64 mostly-zero entries per histogram.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| Json::Arr(vec![Json::num_u64(i as u64), Json::num_u64(n)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num_u64(self.count)),
+            ("sum_ns", Json::num_u64(self.sum_ns)),
+            ("max_ns", Json::num_u64(self.max_ns)),
+            ("mean_ns", Json::Num(self.mean_ns())),
+            ("p50_ns", Json::num_u64(self.quantile_ns(0.50))),
+            ("p90_ns", Json::num_u64(self.quantile_ns(0.90))),
+            ("p99_ns", Json::num_u64(self.quantile_ns(0.99))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    /// Rebuild from [`to_json`](Self::to_json) output. Derived fields
+    /// (mean, quantiles) are recomputed, not trusted.
+    pub fn from_json(v: &Json) -> Result<HistSnapshot> {
+        let field = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| AsnnError::Protocol(format!("histogram: missing field {key}")))
+        };
+        let mut snap = HistSnapshot {
+            count: field("count")?,
+            sum_ns: field("sum_ns")?,
+            max_ns: field("max_ns")?,
+            ..HistSnapshot::default()
+        };
+        let buckets = v
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| AsnnError::Protocol("histogram: missing buckets".into()))?;
+        for entry in buckets {
+            let pair = entry
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| AsnnError::Protocol("histogram: bad bucket entry".into()))?;
+            let (i, n) = (pair[0].as_u64(), pair[1].as_u64());
+            match (i, n) {
+                (Some(i), Some(n)) if (i as usize) < BUCKETS => snap.buckets[i as usize] = n,
+                _ => return Err(AsnnError::Protocol("histogram: bad bucket entry".into())),
+            }
+        }
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_matches_locked_histogram() {
+        use crate::util::stats::LatencyHistogram;
+        let atomic = AtomicHistogram::new();
+        let mut locked = LatencyHistogram::new();
+        for ns in [0, 1, 2, 3, 1000, 1_000_000, u64::MAX] {
+            atomic.record_ns(ns);
+            locked.record_ns(ns);
+        }
+        let snap = atomic.snapshot();
+        assert_eq!(snap.count, locked.count());
+        assert_eq!(snap.max_ns, locked.max_ns());
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(snap.quantile_ns(q), locked.quantile_ns(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let snap = AtomicHistogram::new().snapshot();
+        assert!(snap.is_empty());
+        assert_eq!(snap.mean_ns(), 0.0);
+        assert_eq!(snap.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn quantiles_bound_true_values() {
+        let h = AtomicHistogram::new();
+        for ns in 1..=1000u64 {
+            h.record_ns(ns);
+        }
+        let snap = h.snapshot();
+        let p50 = snap.quantile_ns(0.5);
+        // true median 500; reported value is a ≤2× upper bound
+        assert!((500..=1024).contains(&p50), "p50={p50}");
+        assert!(snap.quantile_ns(0.99) >= 990);
+        assert_eq!(snap.max_ns, 1000);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_counts() {
+        let h = AtomicHistogram::new();
+        for ns in [5u64, 5, 120, 4096, 1 << 40] {
+            h.record_ns(ns);
+        }
+        let snap = h.snapshot();
+        let parsed = Json::parse(&snap.to_json().render()).unwrap();
+        let restored = HistSnapshot::from_json(&parsed).unwrap();
+        assert_eq!(restored, snap);
+    }
+
+    #[test]
+    fn add_merges_counts() {
+        let a = AtomicHistogram::new();
+        a.record_ns(10);
+        let b = AtomicHistogram::new();
+        b.record_ns(1000);
+        b.record_ns(2000);
+        a.add(&b.snapshot());
+        let snap = a.snapshot();
+        assert_eq!(snap.count, 3);
+        assert_eq!(snap.max_ns, 2000);
+        assert_eq!(snap.sum_ns, 3010);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        for bad in ["{}", "{\"count\":1}", "{\"count\":1,\"sum_ns\":1,\"max_ns\":1,\"buckets\":[[99,1]]}"]
+        {
+            let v = Json::parse(bad).unwrap();
+            assert!(HistSnapshot::from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! First-class observability: per-stage tracing, lock-light latency
+//! histograms, and the structured telemetry surface behind the
+//! `STATS2` and `TRACE` wire verbs.
+//!
+//! ```text
+//!   engines ──┐  coarse/refine/scan spans        ┌──► STATS2 [json|text]
+//!   router  ──┼► Recorder ──► ObsSnapshot ──────┤     (stage histograms,
+//!   batcher ──┘  retry/hedge/batch-wait,         │      per-engine counters)
+//!                per-engine counters             └──► obs-*.snap generations
+//!                                                     (crash-safe store;
+//!   TRACE <x> <y> <k> ──► QueryTrace span tree         restored on boot)
+//! ```
+//!
+//! Layering: `obs` sits beside `util` at the bottom of the crate — the
+//! engines and the coordinator both depend on it, never the reverse.
+//! Wire rendering uses the in-repo [`json`] module (serde is not in the
+//! offline vendor set). Formats are documented in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod hist;
+pub mod json;
+pub mod recorder;
+pub mod trace;
+
+pub use hist::{AtomicHistogram, HistSnapshot};
+pub use json::Json;
+pub use recorder::{EngineCounters, ObsSnapshot, Recorder};
+pub use trace::{QueryTrace, SearchStep, SearchTrace, Stage, StageSpan};

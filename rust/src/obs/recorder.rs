@@ -1,0 +1,346 @@
+//! Lock-light telemetry recorder.
+//!
+//! One [`Recorder`] lives behind the router (shared `Arc`) and is fed
+//! from every layer: engines record coarse/refine/scan stage times,
+//! the router records retry and hedge waits plus per-engine outcomes,
+//! the batching lane records queue waits. Recording is wait-free
+//! (relaxed atomics); the only lock is a briefly-held `RwLock` on the
+//! per-engine registry, taken in write mode once per engine lifetime.
+//!
+//! [`ObsSnapshot`] is the read-side view: it renders `STATS2` sections
+//! and the `obs` generation files persisted by the snapshotter, and
+//! restores across restarts via [`Recorder::restore`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::hist::{AtomicHistogram, HistSnapshot};
+use super::json::Json;
+use super::trace::Stage;
+use crate::error::{AsnnError, Result};
+
+/// Wait-free per-engine counters plus a latency histogram.
+#[derive(Debug, Default)]
+pub struct EngineCounters {
+    /// Attempts settled against this engine (success + failure).
+    pub requests: AtomicU64,
+    /// Failed attempts.
+    pub errors: AtomicU64,
+    /// Individual queries served through the batched path.
+    pub batch_queries: AtomicU64,
+    /// Per-attempt latency (successful attempts only).
+    pub latency: AtomicHistogram,
+}
+
+impl EngineCounters {
+    pub fn record_ok(&self, ns: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency.record_ns(ns);
+    }
+
+    pub fn record_err(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, queries: u64) {
+        self.batch_queries.fetch_add(queries, Ordering::Relaxed);
+    }
+}
+
+/// The telemetry hub. Cheap to clone via `Arc`; all methods take
+/// `&self`.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    stages: [AtomicHistogram; 6],
+    engines: RwLock<BTreeMap<String, Arc<EngineCounters>>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one span for `stage`. Wait-free.
+    #[inline]
+    pub fn record_stage(&self, stage: Stage, ns: u64) {
+        self.stages[stage as usize].record_ns(ns);
+    }
+
+    /// Counters for `name`, creating them on first use. The write lock
+    /// is taken only on that first use; steady state is a read lock.
+    pub fn engine(&self, name: &str) -> Arc<EngineCounters> {
+        if let Some(c) = self.engines.read().expect("obs registry poisoned").get(name) {
+            return Arc::clone(c);
+        }
+        let mut map = self.engines.write().expect("obs registry poisoned");
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    pub fn record_engine_ok(&self, name: &str, ns: u64) {
+        self.engine(name).record_ok(ns);
+    }
+
+    pub fn record_engine_err(&self, name: &str) {
+        self.engine(name).record_err();
+    }
+
+    pub fn record_engine_batch(&self, name: &str, queries: u64) {
+        self.engine(name).record_batch(queries);
+    }
+
+    /// Point-in-time copy of everything the recorder holds.
+    pub fn snapshot(&self) -> ObsSnapshot {
+        let stages = Stage::ALL
+            .into_iter()
+            .map(|s| (s, self.stages[s as usize].snapshot()))
+            .collect();
+        let engines = self
+            .engines
+            .read()
+            .expect("obs registry poisoned")
+            .iter()
+            .map(|(name, c)| EngineSnapshot {
+                name: name.clone(),
+                requests: c.requests.load(Ordering::Relaxed),
+                errors: c.errors.load(Ordering::Relaxed),
+                batch_queries: c.batch_queries.load(Ordering::Relaxed),
+                latency: c.latency.snapshot(),
+            })
+            .collect();
+        ObsSnapshot { stages, engines }
+    }
+
+    /// Fold a persisted snapshot's counts back in (warm restart). Adds
+    /// to whatever has been recorded since boot.
+    pub fn restore(&self, snap: &ObsSnapshot) {
+        for (stage, hist) in &snap.stages {
+            self.stages[*stage as usize].add(hist);
+        }
+        for e in &snap.engines {
+            let counters = self.engine(&e.name);
+            counters.requests.fetch_add(e.requests, Ordering::Relaxed);
+            counters.errors.fetch_add(e.errors, Ordering::Relaxed);
+            counters.batch_queries.fetch_add(e.batch_queries, Ordering::Relaxed);
+            counters.latency.add(&e.latency);
+        }
+    }
+
+    /// Serialized snapshot for the crash-safe store (`obs` generation
+    /// payload: the JSON document, framed/checksummed by the store).
+    pub fn export_bytes(&self) -> Vec<u8> {
+        self.snapshot().to_json().render().into_bytes()
+    }
+
+    /// Restore from [`export_bytes`](Self::export_bytes) output.
+    pub fn restore_bytes(&self, payload: &[u8]) -> Result<()> {
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| AsnnError::Store("obs snapshot: not utf-8".into()))?;
+        let snap = ObsSnapshot::from_json(&Json::parse(text)?)?;
+        self.restore(&snap);
+        Ok(())
+    }
+}
+
+/// Per-engine counter snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineSnapshot {
+    pub name: String,
+    pub requests: u64,
+    pub errors: u64,
+    pub batch_queries: u64,
+    pub latency: HistSnapshot,
+}
+
+/// Point-in-time recorder state: stage histograms + engine counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsSnapshot {
+    pub stages: Vec<(Stage, HistSnapshot)>,
+    pub engines: Vec<EngineSnapshot>,
+}
+
+impl ObsSnapshot {
+    pub fn stage(&self, stage: Stage) -> Option<&HistSnapshot> {
+        self.stages.iter().find(|(s, _)| *s == stage).map(|(_, h)| h)
+    }
+
+    /// JSON export: `{"stages": {...}, "engines": {...}}`.
+    pub fn to_json(&self) -> Json {
+        let stages = self
+            .stages
+            .iter()
+            .map(|(s, h)| (s.as_str().to_string(), h.to_json()))
+            .collect();
+        let engines = self
+            .engines
+            .iter()
+            .map(|e| {
+                (
+                    e.name.clone(),
+                    Json::obj(vec![
+                        ("requests", Json::num_u64(e.requests)),
+                        ("errors", Json::num_u64(e.errors)),
+                        ("batch_queries", Json::num_u64(e.batch_queries)),
+                        ("latency", e.latency.to_json()),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Obj(vec![
+            ("stages".to_string(), Json::Obj(stages)),
+            ("engines".to_string(), Json::Obj(engines)),
+        ])
+    }
+
+    /// Rebuild from [`to_json`](Self::to_json) output. Unknown stage
+    /// names are rejected; unknown extra fields are ignored so the
+    /// schema can grow.
+    pub fn from_json(v: &Json) -> Result<ObsSnapshot> {
+        let stage_obj = match v.get("stages") {
+            Some(Json::Obj(fields)) => fields,
+            _ => return Err(AsnnError::Protocol("obs snapshot: missing stages".into())),
+        };
+        let mut stages = Vec::with_capacity(stage_obj.len());
+        for (name, hist) in stage_obj {
+            let stage = Stage::parse(name)
+                .ok_or_else(|| AsnnError::Protocol(format!("obs snapshot: unknown stage {name}")))?;
+            stages.push((stage, HistSnapshot::from_json(hist)?));
+        }
+        let engine_obj = match v.get("engines") {
+            Some(Json::Obj(fields)) => fields,
+            _ => return Err(AsnnError::Protocol("obs snapshot: missing engines".into())),
+        };
+        let mut engines = Vec::with_capacity(engine_obj.len());
+        for (name, body) in engine_obj {
+            let field = |key: &str| -> Result<u64> {
+                body.get(key).and_then(Json::as_u64).ok_or_else(|| {
+                    AsnnError::Protocol(format!("obs snapshot: engine {name} missing {key}"))
+                })
+            };
+            engines.push(EngineSnapshot {
+                name: name.clone(),
+                requests: field("requests")?,
+                errors: field("errors")?,
+                batch_queries: field("batch_queries")?,
+                latency: HistSnapshot::from_json(body.get("latency").ok_or_else(|| {
+                    AsnnError::Protocol(format!("obs snapshot: engine {name} missing latency"))
+                })?)?,
+            });
+        }
+        Ok(ObsSnapshot { stages, engines })
+    }
+
+    /// Flat `key=value` rendering for `STATS2 text` (space-separated —
+    /// the wire protocol keeps responses on one line).
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for (stage, h) in &self.stages {
+            let _ = write!(
+                out,
+                "stage.{0}.count={1} stage.{0}.p50_us={2:.1} stage.{0}.p90_us={3:.1} \
+                 stage.{0}.p99_us={4:.1} stage.{0}.mean_us={5:.1} ",
+                stage.as_str(),
+                h.count,
+                h.quantile_ns(0.50) as f64 / 1e3,
+                h.quantile_ns(0.90) as f64 / 1e3,
+                h.quantile_ns(0.99) as f64 / 1e3,
+                h.mean_ns() / 1e3,
+            );
+        }
+        for e in &self.engines {
+            let _ = write!(
+                out,
+                "engine.{0}.requests={1} engine.{0}.errors={2} engine.{0}.batched={3} \
+                 engine.{0}.p99_us={4:.1} ",
+                e.name,
+                e.requests,
+                e.errors,
+                e.batch_queries,
+                e.latency.quantile_ns(0.99) as f64 / 1e3,
+            );
+        }
+        out.trim_end().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_records() {
+        let r = Recorder::new();
+        r.record_stage(Stage::Coarse, 1_000);
+        r.record_stage(Stage::Coarse, 2_000);
+        r.record_stage(Stage::Scan, 500);
+        r.record_engine_ok("active", 5_000);
+        r.record_engine_err("active");
+        r.record_engine_batch("brute", 32);
+        let snap = r.snapshot();
+        assert_eq!(snap.stage(Stage::Coarse).unwrap().count, 2);
+        assert_eq!(snap.stage(Stage::Scan).unwrap().count, 1);
+        assert_eq!(snap.stage(Stage::Refine).unwrap().count, 0);
+        let active = snap.engines.iter().find(|e| e.name == "active").unwrap();
+        assert_eq!(active.requests, 2);
+        assert_eq!(active.errors, 1);
+        let brute = snap.engines.iter().find(|e| e.name == "brute").unwrap();
+        assert_eq!(brute.batch_queries, 32);
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = Recorder::new();
+        r.record_stage(Stage::Refine, 123);
+        r.record_stage(Stage::BatchWait, 45_678);
+        r.record_engine_ok("kdtree", 900);
+        let snap = r.snapshot();
+        let parsed = Json::parse(&snap.to_json().render()).unwrap();
+        assert_eq!(ObsSnapshot::from_json(&parsed).unwrap(), snap);
+    }
+
+    #[test]
+    fn restore_accumulates() {
+        let a = Recorder::new();
+        a.record_stage(Stage::Hedge, 10);
+        a.record_engine_ok("brute", 100);
+        let persisted = a.export_bytes();
+
+        let b = Recorder::new();
+        b.record_stage(Stage::Hedge, 20);
+        b.restore_bytes(&persisted).unwrap();
+        let snap = b.snapshot();
+        assert_eq!(snap.stage(Stage::Hedge).unwrap().count, 2);
+        assert_eq!(snap.engines.iter().find(|e| e.name == "brute").unwrap().requests, 1);
+    }
+
+    #[test]
+    fn restore_rejects_garbage() {
+        let r = Recorder::new();
+        assert!(r.restore_bytes(b"not json").is_err());
+        assert!(r.restore_bytes(b"{}").is_err());
+        assert!(r.restore_bytes(b"{\"stages\":{\"bogus\":{}},\"engines\":{}}").is_err());
+    }
+
+    #[test]
+    fn engine_registry_is_shared() {
+        let r = Arc::new(Recorder::new());
+        let c1 = r.engine("x");
+        let c2 = r.engine("x");
+        c1.record_ok(10);
+        c2.record_ok(20);
+        assert_eq!(r.snapshot().engines[0].requests, 2);
+    }
+
+    #[test]
+    fn text_rendering_is_flat_single_line() {
+        let r = Recorder::new();
+        r.record_stage(Stage::Coarse, 1_000);
+        r.record_engine_ok("active", 2_000);
+        let text = r.snapshot().render_text();
+        assert!(text.contains("stage.coarse.count=1"));
+        assert!(text.contains("engine.active.requests=1"));
+        assert!(!text.contains('\n'));
+    }
+}

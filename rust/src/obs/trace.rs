@@ -1,0 +1,237 @@
+//! Stable, serializable trace records.
+//!
+//! [`SearchTrace`] began life as an ad-hoc debug struct inside
+//! `active/`; it is now the crate-wide trace record every
+//! [`crate::engine::NnEngine`] populates (via `knn_trace`), carrying
+//! both the paper-level radius schedule ([`SearchStep`]) and wall-clock
+//! [`StageSpan`]s. [`QueryTrace`] wraps one traced request end-to-end
+//! and renders the span tree returned by the `TRACE` wire verb.
+//!
+//! The JSON schema is documented in `docs/OBSERVABILITY.md`; treat
+//! field names here as a wire contract.
+
+use super::json::Json;
+
+/// A pipeline stage with its own latency histogram and trace spans.
+///
+/// `Coarse`/`Refine`/`Scan` are the paper's staged search (radius
+/// iteration, candidate re-rank, disk collection); `Retry`, `Hedge`,
+/// and `BatchWait` are coordinator stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Stage {
+    Coarse = 0,
+    Refine = 1,
+    Scan = 2,
+    Retry = 3,
+    Hedge = 4,
+    BatchWait = 5,
+}
+
+impl Stage {
+    /// Every stage, in histogram index order.
+    pub const ALL: [Stage; 6] =
+        [Stage::Coarse, Stage::Refine, Stage::Scan, Stage::Retry, Stage::Hedge, Stage::BatchWait];
+
+    /// Stable wire name (used in `STATS2` keys and trace span names).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Stage::Coarse => "coarse",
+            Stage::Refine => "refine",
+            Stage::Scan => "scan",
+            Stage::Retry => "retry",
+            Stage::Hedge => "hedge",
+            Stage::BatchWait => "batch_wait",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|st| st.as_str() == s)
+    }
+}
+
+/// One timed span attributed to a [`Stage`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageSpan {
+    pub stage: Stage,
+    pub dur_ns: u64,
+}
+
+/// One step of an active search, recorded for traces and Fig. 2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchStep {
+    /// Radius used this iteration (pixels).
+    pub r: u32,
+    /// Points counted inside the circle.
+    pub n: u64,
+}
+
+/// Full trace of one engine-level search: the paper's radius schedule
+/// plus wall-clock spans per stage. Every engine populates this (see
+/// `NnEngine::knn_trace`); engines without a staged pipeline report a
+/// single `scan` span covering the whole query.
+#[derive(Debug, Clone, Default)]
+pub struct SearchTrace {
+    pub steps: Vec<SearchStep>,
+    /// True if the loop ended by |n−k| ≤ tolerance, false if it hit the
+    /// max-iteration guard or the radius cap.
+    pub converged: bool,
+    /// Radius growth steps resolved from pyramid upper bounds alone —
+    /// coarse-to-fine skips that never paid for an exact disk scan, so
+    /// they appear in neither `steps` nor the work accounting.
+    pub coarse_skips: u32,
+    /// Wall-clock spans, one per stage the query passed through.
+    pub spans: Vec<StageSpan>,
+}
+
+impl SearchTrace {
+    pub fn iterations(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn final_radius(&self) -> Option<u32> {
+        self.steps.last().map(|s| s.r)
+    }
+
+    /// Append a stage span (merges into an existing span for the same
+    /// stage so repeated scan rounds aggregate).
+    pub fn push_span(&mut self, stage: Stage, dur_ns: u64) {
+        if let Some(span) = self.spans.iter_mut().find(|s| s.stage == stage) {
+            span.dur_ns += dur_ns;
+        } else {
+            self.spans.push(StageSpan { stage, dur_ns });
+        }
+    }
+
+    /// Total nanoseconds attributed to `stage` (0 if absent).
+    pub fn span_ns(&self, stage: Stage) -> u64 {
+        self.spans.iter().filter(|s| s.stage == stage).map(|s| s.dur_ns).sum()
+    }
+
+    /// Sum of all stage spans.
+    pub fn spans_total_ns(&self) -> u64 {
+        self.spans.iter().map(|s| s.dur_ns).sum()
+    }
+}
+
+/// One traced request end-to-end: what the `TRACE` verb returns.
+#[derive(Debug, Clone)]
+pub struct QueryTrace {
+    /// Engine that served the query.
+    pub engine: String,
+    pub k: usize,
+    pub query: Vec<f64>,
+    /// Wall-clock time inside the engine call.
+    pub engine_ns: u64,
+    /// Wall-clock time for the whole request as seen by the router.
+    pub total_ns: u64,
+    /// Neighbors returned (count only is serialized).
+    pub neighbors: usize,
+    pub search: SearchTrace,
+}
+
+impl QueryTrace {
+    /// Render the span tree: `request` → `engine:<name>` → stage spans.
+    /// Stage spans are disjoint sub-intervals of the engine call, so
+    /// their durations sum to ≤ `engine_ns` ≤ `total_ns` — the
+    /// invariant the e2e suite checks.
+    pub fn to_json(&self) -> Json {
+        let stage_spans: Vec<Json> = self
+            .search
+            .spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.stage.as_str().into())),
+                    ("dur_ns", Json::num_u64(s.dur_ns)),
+                ])
+            })
+            .collect();
+        let engine_span = Json::obj(vec![
+            ("name", Json::Str(format!("engine:{}", self.engine))),
+            ("dur_ns", Json::num_u64(self.engine_ns)),
+            ("children", Json::Arr(stage_spans)),
+        ]);
+        let root = Json::obj(vec![
+            ("name", Json::Str("request".into())),
+            ("dur_ns", Json::num_u64(self.total_ns)),
+            ("children", Json::Arr(vec![engine_span])),
+        ]);
+        let steps: Vec<Json> = self
+            .search
+            .steps
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("r", Json::num_u64(u64::from(s.r))),
+                    ("n", Json::num_u64(s.n)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("engine", Json::Str(self.engine.clone())),
+            ("k", Json::num_u64(self.k as u64)),
+            ("query", Json::Arr(self.query.iter().map(|&c| Json::Num(c)).collect())),
+            ("neighbors", Json::num_u64(self.neighbors as u64)),
+            ("total_ns", Json::num_u64(self.total_ns)),
+            ("converged", Json::Bool(self.search.converged)),
+            ("iterations", Json::num_u64(self.search.iterations() as u64)),
+            ("coarse_skips", Json::num_u64(u64::from(self.search.coarse_skips))),
+            ("steps", Json::Arr(steps)),
+            ("root", root),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_roundtrip() {
+        for stage in Stage::ALL {
+            assert_eq!(Stage::parse(stage.as_str()), Some(stage));
+        }
+        assert_eq!(Stage::parse("bogus"), None);
+    }
+
+    #[test]
+    fn push_span_merges_same_stage() {
+        let mut t = SearchTrace::default();
+        t.push_span(Stage::Scan, 10);
+        t.push_span(Stage::Coarse, 5);
+        t.push_span(Stage::Scan, 7);
+        assert_eq!(t.spans.len(), 2);
+        assert_eq!(t.span_ns(Stage::Scan), 17);
+        assert_eq!(t.spans_total_ns(), 22);
+    }
+
+    #[test]
+    fn trace_json_has_span_tree() {
+        let mut search = SearchTrace { converged: true, ..Default::default() };
+        search.steps.push(SearchStep { r: 100, n: 7 });
+        search.push_span(Stage::Coarse, 300);
+        search.push_span(Stage::Scan, 500);
+        let trace = QueryTrace {
+            engine: "active".into(),
+            k: 3,
+            query: vec![0.25, 0.75],
+            engine_ns: 900,
+            total_ns: 1200,
+            neighbors: 3,
+            search,
+        };
+        let doc = trace.to_json();
+        let root = doc.get("root").unwrap();
+        assert_eq!(root.get("dur_ns").unwrap().as_u64(), Some(1200));
+        let engine = &root.get("children").unwrap().as_arr().unwrap()[0];
+        assert_eq!(engine.get("name").unwrap().as_str(), Some("engine:active"));
+        let leaves = engine.get("children").unwrap().as_arr().unwrap();
+        let leaf_sum: u64 = leaves.iter().map(|l| l.get("dur_ns").unwrap().as_u64().unwrap()).sum();
+        assert!(leaf_sum <= trace.engine_ns);
+        // and the rendered document survives a parse
+        let parsed = Json::parse(&doc.render()).unwrap();
+        assert_eq!(parsed, doc);
+    }
+}

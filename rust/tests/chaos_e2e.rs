@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use asnn::coordinator::resilience::{BreakerPolicy, ResiliencePolicy, RetryPolicy};
 use asnn::coordinator::server::Client;
-use asnn::coordinator::{Metrics, Request, Response, Router, Server};
+use asnn::coordinator::{ErrCode, Metrics, Request, Response, Router, Server};
 use asnn::data::synthetic::{generate, SyntheticSpec};
 use asnn::engine::brute::BruteEngine;
 use asnn::engine::chaos::{ChaosConfig, ChaosEngine};
@@ -204,8 +204,8 @@ fn full_queue_sheds_with_structured_overload_error() {
     for _ in 0..3 {
         let mut extra = Client::connect(&handle.addr).unwrap();
         match extra.call(&Request::Knn { k: 3, x: 0.5, y: 0.5, engine: None }).unwrap() {
-            Response::Error { domain, message } => {
-                assert_eq!(domain, "overload");
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrCode::Overload);
                 assert!(message.contains("retry"), "{message}");
             }
             other => panic!("expected overload error, got {other:?}"),
@@ -343,8 +343,8 @@ fn request_budget_bounds_total_latency_across_retries() {
 
     let t0 = std::time::Instant::now();
     match c.call(&Request::Knn { k: 5, x: 0.42, y: 0.58, engine: None }).unwrap() {
-        Response::Error { domain, message } => {
-            assert_eq!(domain, "timeout");
+        Response::Error { code, message } => {
+            assert_eq!(code, ErrCode::Timeout);
             assert!(message.contains("budget"), "{message}");
         }
         other => panic!("expected budget timeout, got {other:?}"),

@@ -1,0 +1,146 @@
+//! End-to-end observability wire tests: the STATS2 schema over real
+//! TCP, TRACE span-tree invariants against a live server, and the
+//! frozen legacy STATS shim.
+
+use std::sync::Arc;
+
+use asnn::coordinator::server::Client;
+use asnn::coordinator::{Metrics, Request, Response, Router, Server, StatsFormat};
+use asnn::data::synthetic::{generate, SyntheticSpec};
+use asnn::engine::active::{ActiveEngine, ActiveParams};
+use asnn::engine::brute::BruteEngine;
+use asnn::obs::{Json, Recorder};
+
+/// Server wiring as `asnn serve` does it: one recorder shared by the
+/// active engine (stage spans) and the router (engine counters).
+fn obs_router(n: usize, seed: u64) -> Router {
+    let ds = Arc::new(generate(&SyntheticSpec::paper_default(n, seed)));
+    let recorder = Arc::new(Recorder::new());
+    let mut active = ActiveEngine::new(ds.clone(), 256, ActiveParams::default()).unwrap();
+    active.set_recorder(Arc::clone(&recorder));
+    let mut router = Router::new("active", Arc::new(Metrics::new()));
+    router.set_recorder(recorder);
+    router.register_engine(Arc::new(BruteEngine::new(ds)));
+    router.register_engine(Arc::new(active));
+    router
+}
+
+fn text(resp: Response) -> String {
+    match resp {
+        Response::Text(t) => t,
+        other => panic!("expected text response, got {other:?}"),
+    }
+}
+
+#[test]
+fn stats2_json_schema_over_tcp() {
+    let handle = Server::new(Arc::new(obs_router(3000, 701)), 2)
+        .spawn("127.0.0.1:0")
+        .unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    for (x, y) in [(0.3, 0.4), (0.6, 0.6), (0.5, 0.2)] {
+        match c.call(&Request::Knn { k: 11, x, y, engine: None }).unwrap() {
+            Response::Neighbors(hits) => assert!(!hits.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+    let raw = text(
+        c.call(&Request::Stats2 { format: StatsFormat::Json, section: None }).unwrap(),
+    );
+    let doc = Json::parse(&raw).unwrap();
+    assert_eq!(doc.get("v").and_then(Json::as_u64), Some(2), "{raw}");
+
+    // every stage appears with a latency histogram; the active engine
+    // self-reported its coarse radius loop and disk scan
+    let stages = doc.get("stages").expect("stages section");
+    for name in ["coarse", "refine", "scan", "retry", "hedge", "batch_wait"] {
+        let stage = stages.get(name).unwrap_or_else(|| panic!("missing stage {name}"));
+        assert!(stage.get("count").and_then(Json::as_u64).is_some(), "{name}");
+        assert!(stage.get("p50_ns").and_then(Json::as_u64).is_some(), "{name}");
+    }
+    assert!(stages.get("coarse").unwrap().get("count").and_then(Json::as_u64).unwrap() >= 3);
+    assert!(stages.get("scan").unwrap().get("count").and_then(Json::as_u64).unwrap() >= 3);
+
+    // per-engine counters: the default chain settled on "active"
+    let active = doc.get("engines").and_then(|e| e.get("active")).expect("engines.active");
+    assert!(active.get("requests").and_then(Json::as_u64).unwrap() >= 3);
+    assert_eq!(active.get("errors").and_then(Json::as_u64), Some(0));
+
+    // coordinator section mirrors the legacy counters
+    let coord = doc.get("coordinator").expect("coordinator section");
+    assert_eq!(coord.get("knn_requests").and_then(Json::as_u64), Some(3));
+
+    handle.shutdown();
+}
+
+#[test]
+fn trace_span_tree_over_tcp() {
+    let handle = Server::new(Arc::new(obs_router(3000, 702)), 2)
+        .spawn("127.0.0.1:0")
+        .unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    let raw = text(
+        c.call(&Request::Trace { k: 7, x: 0.4, y: 0.6, engine: Some("active".into()) })
+            .unwrap(),
+    );
+    let doc = Json::parse(&raw).unwrap();
+    assert_eq!(doc.get("v").and_then(Json::as_u64), Some(1), "{raw}");
+    assert_eq!(doc.get("engine").and_then(Json::as_str), Some("active"));
+    assert!(doc.get("neighbors").and_then(Json::as_u64).unwrap() >= 1);
+
+    // span tree: request → engine:active → stage leaves, durations
+    // nested (leaf sum ≤ engine ≤ request)
+    let root = doc.get("root").expect("root span");
+    assert_eq!(root.get("name").and_then(Json::as_str), Some("request"));
+    let total_ns = root.get("dur_ns").and_then(Json::as_u64).unwrap();
+    let engine_span = &root.get("children").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(engine_span.get("name").and_then(Json::as_str), Some("engine:active"));
+    let engine_ns = engine_span.get("dur_ns").and_then(Json::as_u64).unwrap();
+    let leaves = engine_span.get("children").and_then(Json::as_arr).unwrap();
+    assert!(!leaves.is_empty(), "{raw}");
+    let leaf_sum: u64 =
+        leaves.iter().map(|l| l.get("dur_ns").and_then(Json::as_u64).unwrap()).sum();
+    assert!(
+        leaf_sum <= engine_ns && engine_ns <= total_ns,
+        "span nesting violated: leaves={leaf_sum} engine={engine_ns} total={total_ns}"
+    );
+    let names: Vec<&str> =
+        leaves.iter().filter_map(|l| l.get("name").and_then(Json::as_str)).collect();
+    assert!(names.contains(&"coarse"), "{names:?}");
+    assert!(names.contains(&"scan"), "{names:?}");
+
+    handle.shutdown();
+}
+
+#[test]
+fn legacy_stats_shim_is_frozen() {
+    let handle = Server::new(Arc::new(obs_router(2000, 703)), 2)
+        .spawn("127.0.0.1:0")
+        .unwrap();
+    let mut c = Client::connect(&handle.addr).unwrap();
+    for (x, y) in [(0.3, 0.4), (0.7, 0.2)] {
+        c.call(&Request::Knn { k: 5, x, y, engine: None }).unwrap();
+    }
+    c.call(&Request::Classify { k: 5, x: 0.5, y: 0.5, engine: None }).unwrap();
+
+    let raw = text(c.call(&Request::Stats).unwrap());
+    // the one-line key=value format is a compatibility contract: same
+    // keys, same order, forever (STATS2 is where the schema grows)
+    let keys: Vec<&str> =
+        raw.split_whitespace().map(|kv| kv.split('=').next().unwrap()).collect();
+    assert_eq!(
+        keys,
+        [
+            "knn", "classify", "errors", "batches", "batched", "expired_dropped",
+            "accept_errors", "shed", "timeouts", "retries", "trips", "fallbacks",
+            "panics", "hedges", "hedge_wins", "budget_exhausted", "oversize_rejected",
+            "idle_disconnects", "write_timeout_disconnects", "corrupt_quarantined",
+            "snapshots", "snapshot_failures", "knn_mean_us", "knn_p50_us", "knn_p99_us",
+            "classify_mean_us", "classify_p99_us",
+        ],
+        "legacy STATS keys drifted: {raw}"
+    );
+    assert!(raw.starts_with("knn=2 classify=1 "), "{raw}");
+
+    handle.shutdown();
+}

@@ -169,7 +169,8 @@ fn prop_pixel_mapping_total() {
 fn prop_protocol_parse_total() {
     use asnn::coordinator::{Request, Response};
     let tokens = [
-        "KNN", "KNNB", "CLASSIFY", "PING", "STATS", "HEALTH", "QUIT", "OK", "ERR", "B",
+        "KNN", "KNNB", "CLASSIFY", "PING", "STATS", "STATS2", "TRACE", "HEALTH", "QUIT",
+        "OK", "ERR", "B", "json", "text", "stages", "engines", "coordinator",
         "1", "-3", "0.5", "1e308", "-1e-308", "nan", "inf", "18446744073709551616", "x",
         "=", ";", "\"", "\\", "\u{7f}", "🦀",
     ];
@@ -193,6 +194,40 @@ fn prop_protocol_parse_total() {
         let text = String::from_utf8_lossy(&bytes);
         let _ = Request::parse(&text);
         let _ = Response::parse(&text);
+    }
+}
+
+/// Property: the STATS2 observability document round-trips — for
+/// arbitrary recorded stage spans and engine counters, render → parse
+/// → re-render is byte-identical, the parsed document rebuilds the
+/// exact snapshot, and restoring the export into a fresh recorder
+/// reproduces the same document (what a warm restart does).
+#[test]
+fn prop_obs_snapshot_json_roundtrips() {
+    use asnn::obs::{Json, ObsSnapshot, Recorder, Stage};
+    let mut rng = Rng::new(617);
+    let engines = ["brute", "kdtree", "active", "active-pjrt"];
+    for case in 0..100u64 {
+        let r = Recorder::new();
+        for _ in 0..rng.below(200) {
+            let stage = Stage::ALL[rng.below(Stage::ALL.len() as u64) as usize];
+            r.record_stage(stage, rng.below(10_000_000_000));
+            let name = engines[rng.below(engines.len() as u64) as usize];
+            match rng.below(3) {
+                0 => r.record_engine_ok(name, rng.below(1_000_000_000)),
+                1 => r.record_engine_err(name),
+                _ => r.record_engine_batch(name, rng.below(64)),
+            }
+        }
+        let snap = r.snapshot();
+        let rendered = snap.to_json().render();
+        let parsed = Json::parse(&rendered).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(parsed.render(), rendered, "case {case}");
+        assert_eq!(ObsSnapshot::from_json(&parsed).unwrap(), snap, "case {case}");
+
+        let fresh = Recorder::new();
+        fresh.restore_bytes(&r.export_bytes()).unwrap();
+        assert_eq!(fresh.snapshot().to_json().render(), rendered, "case {case}");
     }
 }
 
